@@ -1,0 +1,105 @@
+"""Aggregate dry-run JSONs into the §Roofline table (EXPERIMENTS.md).
+
+Reads results/dryrun/*.json produced by repro.launch.dryrun and emits a
+markdown table with the three roofline terms per (arch x shape x mesh),
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and memory-fit status.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    return f"{x * 1e3:8.2f}ms"
+
+
+def load_results(path: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def table(rows, mesh: str):
+    out = []
+    hdr = (f"| arch | shape | mode | compute | memory | collective | "
+           f"bound | useful-flop | peak GB/dev | fits |")
+    sep = "|" + "---|" * 10
+    out.append(hdr)
+    out.append(sep)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mode']} | "
+                       f"FAILED: {r['error'][:60]} |||||||")
+            continue
+        rf = r["roofline"]
+        peak = r["memory"].get("peak_bytes_per_device")
+        peak_gb = (peak / 1e9) if isinstance(peak, (int, float)) else None
+        fits = "yes" if peak_gb is not None and peak_gb <= 16 else \
+            (f"NO ({peak_gb:.0f}GB)" if peak_gb else "?")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | "
+            f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | {rf['dominant']} | "
+            f"{rf['model_flops_ratio']:.3f} | "
+            f"{peak_gb:.1f} | {fits} |" if peak_gb is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | "
+            f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | {rf['dominant']} | "
+            f"{rf['model_flops_ratio']:.3f} | ? | ? |")
+    return "\n".join(out)
+
+
+def summary(rows):
+    ok = [r for r in rows if r["ok"]]
+    from collections import Counter
+    doms = Counter(r["roofline"]["dominant"] for r in ok
+                   if r["mesh"] == "16x16")
+    worst = sorted(
+        (r for r in ok if r["mesh"] == "16x16"),
+        key=lambda r: -(max(r["roofline"]["memory_s"],
+                            r["roofline"]["collective_s"])
+                        / max(r["roofline"]["compute_s"], 1e-12)))[:5]
+    lines = [f"total runs: {len(rows)}, ok: {len(ok)}",
+             f"dominant terms (single-pod): {dict(doms)}",
+             "worst roofline fraction (compute/max-term):"]
+    for r in worst:
+        rf = r["roofline"]
+        frac = rf["compute_s"] / max(rf["memory_s"], rf["collective_s"],
+                                     1e-12)
+        lines.append(f"  {r['arch']} x {r['shape']}: {frac:.4f}")
+    most_coll = sorted(
+        (r for r in ok if r["mesh"] == "16x16"),
+        key=lambda r: -r["roofline"]["collective_s"])[:5]
+    lines.append("most collective-bound (abs):")
+    for r in most_coll:
+        lines.append(f"  {r['arch']} x {r['shape']}: "
+                     f"{r['roofline']['collective_s']:.2f}s")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_results(args.path)
+    print(summary(rows))
+    print()
+    print(table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Distributed BSP inference over a real multi-device JAX mesh.
+
+Each of 4 virtual fog devices owns a vertex partition; every GNN layer
+does a halo exchange (jax.lax collectives under shard_map), exactly the
+paper's BSP runtime (SSIII-E). Must set the device-count flag BEFORE jax
+imports, hence the first lines.
+
+    PYTHONPATH=src python examples/distributed_fog_serving.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import partition  # noqa: E402
+from repro.gnn import datasets, models  # noqa: E402
+from repro.gnn.layers import EdgeList  # noqa: E402
+from repro.runtime import bsp  # noqa: E402
+
+print("devices:", jax.devices())
+g = datasets.load("yelp", scale=0.1, seed=0)
+params, _ = models.train_node_classifier(jax.random.PRNGKey(0), "sage", g,
+                                         steps=60)
+
+assign = partition.bgp(g, 4, seed=0)  # min-cut balanced partitions
+pg = bsp.build_partitioned(g, assign)
+print(f"partitions: slots={pg.slots} edges/part={pg.edges_per_part} "
+      f"boundary={pg.boundary_slots}")
+for ex in ("allgather", "halo"):
+    out = bsp.bsp_infer(params, "sage", g, assign, exchange=ex)
+    ref = np.asarray(models.gnn_apply(params, "sage", g.features,
+                                      EdgeList.from_graph(g)))
+    print(f"exchange={ex:10s} bytes/sync="
+          f"{bsp.exchange_bytes(pg, g.feature_dim, ex):>10,d} "
+          f"max|dist - single|={np.abs(out - ref).max():.2e}")
+print("halo exchange moves only boundary rows — the paper's "
+      "'exchange vertices data when needed'.")

@@ -1,0 +1,12 @@
+"""Beyond the paper: Fograph's placement machinery scheduling LLM serving.
+
+Requests = data points, pods = fog nodes: the proxy-guided profiler fits
+omega(<batch, cache_tokens>) per pod and the LBAP bottleneck solver places
+request batches (see src/repro/launch/serve.py for the full driver).
+
+    PYTHONPATH=src python examples/llm_serving_iep.py
+"""
+from repro.launch.serve import main
+
+raise SystemExit(main(["--arch", "qwen1.5-0.5b", "--requests", "12",
+                       "--tokens", "12", "--pods", "1.0,2.0,3.0"]))

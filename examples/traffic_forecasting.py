@@ -1,0 +1,47 @@
+"""Case study (paper SSIV-C): traffic-flow forecasting over the PeMS sensor
+network with ASTGCN-lite, served by Fograph.
+
+    PYTHONPATH=src python examples/traffic_forecasting.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import compression, placement, simulation
+from repro.gnn import datasets, models
+from repro.gnn.layers import EdgeList
+
+# PeMS-style spatial-temporal data: 307 sensors, 12x5-min history window.
+tg = datasets.load_pems_window(scale=1.0, seed=0)
+g = tg.graph
+print(f"PeMS-like sensor graph: {g.num_vertices} sensors, "
+      f"{g.num_edges // 2} roads; forecasting {tg.target.shape[0]} steps")
+
+params, (mu, sd), loss = models.train_astgcn(
+    jax.random.PRNGKey(0), tg, steps=300)
+edges = EdgeList.from_graph(g)
+pred = np.asarray(models.astgcn_apply(params, tg.history, edges)) * sd + mu
+print("forecast errors:", {k: round(v, 2) for k, v in
+                           models.forecast_errors(pred, tg.target).items()})
+
+# Degree-aware quantized collection of the sensor window (paper SSIII-D).
+window = tg.history.transpose(1, 0, 2).reshape(g.num_vertices, -1)
+packed = compression.daq_pack(window.astype(np.float64), g.degrees)
+print(f"DAQ: {packed.raw_bits // 8} B -> {packed.nbytes(True)} B on the wire "
+      f"(ratio {packed.nbytes(True) / (packed.raw_bits // 8):.3f})")
+
+# Serving comparison on the case-study cluster (1xA + 2xB + 1xC, 4G).
+g_srv = dataclasses.replace(g, features=window.astype(np.float32))
+cluster = simulation.make_cluster("1A+2B+1C", "4g", g_srv,
+                                  hidden=256, k_layers=4)
+fogs = cluster.fog_specs(seed=0)
+pl = placement.iep_place(g_srv, fogs, seed=0, sync_cost=cluster.sync_cost)
+cloud = simulation.simulate_cloud(cluster)
+fograph = simulation.simulate_multi_fog(cluster, pl, compress="daq")
+print(f"cloud {cloud.total_latency:.2f}s vs Fograph "
+      f"{fograph.total_latency:.2f}s "
+      f"({cloud.total_latency / fograph.total_latency:.2f}x speedup; "
+      f"paper reports up to 2.79x)")
+print("vertices per fog (heterogeneity-aware):",
+      np.bincount(pl.assignment, minlength=4))

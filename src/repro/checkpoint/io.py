@@ -1,0 +1,86 @@
+"""Checkpointing: flat-key .npz save/restore for arbitrary param/opt pytrees.
+
+Keys are '/'-joined pytree paths; restore rebuilds into a provided target
+structure (so dtypes/shardings of the live tree are preserved — values are
+device_put with the target's sharding when one is attached). Writes are
+atomic (tmp file + rename) so an interrupted save never corrupts the latest
+checkpoint. Steps are retained with a configurable keep count.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(directory: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    _gc(directory, keep)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, target: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``target`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    data = np.load(path)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    for pth, leaf in leaves_p:
+        key = "/".join(_seg(p) for p in pth)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        val = data[key]
+        if hasattr(leaf, "shape") and tuple(leaf.shape) != tuple(val.shape):
+            raise ValueError(f"{key}: shape {val.shape} != {leaf.shape}")
+        if hasattr(leaf, "sharding") and hasattr(leaf, "dtype"):
+            val = jax.device_put(val.astype(leaf.dtype), leaf.sharding)
+        out.append(val)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), out)
+
+
+def _gc(directory: str, keep: int) -> None:
+    files = sorted(f for f in os.listdir(directory)
+                   if re.match(r"step_\d+\.npz$", f))
+    for f in files[:-keep]:
+        os.remove(os.path.join(directory, f))

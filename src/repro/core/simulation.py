@@ -1,0 +1,301 @@
+"""Fog/cloud serving latency simulation (paper §II-C methodology).
+
+The container has no LAN/WAN or heterogeneous machines, so the measurement
+study and all latency/throughput benchmarks run on an analytic simulator
+whose constants are calibrated to reproduce the paper's *reported ratios*
+(Fig. 3: 64/67/61% collection reduction fog vs cloud; ~1.65/1.73/1.40x
+single-fog speedups; cloud execution <2% of its pipeline; straw-man
+multi-fog exec ~= 67% of single-fog).
+
+Node types A/B/C follow Table II (A is ~37.8% slower than B per §IV-A;
+C is the most powerful). Network constants model effective *collection*
+bandwidth; NSA 5G uplink is the weakest (hence the paper's largest fog
+speedup on 5G), WiFi the strongest.
+
+Everything downstream (IEP, scheduler, benchmarks) consumes this module via
+``FogSpec`` latency models, and the *ground truth* execution cost uses the
+same analytic workload formula with the true capability — so planner error
+vs. reality stays representative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import compression
+from repro.core.placement import FogSpec, Placement
+from repro.core.profiler import (LatencyModel, analytic_measurer,
+                                 cardinality_of, profile_node_analytic)
+from repro.gnn.graph import Graph
+
+# ----------------------------------------------------------------------------
+# Hardware / network constants (calibrated to paper ratios)
+# ----------------------------------------------------------------------------
+
+# Effective sustained GNN throughput (flop/s) per node type. Table II gives
+# i7-6700 (A: 4GB, memory-bound; B: 8GB) and Xeon W-2145 (C).
+NODE_CAPABILITY = {
+    "A": 1.20e8,
+    "B": 1.90e8,   # A is ~37% slower than B (paper §IV-A: 37.8%)
+    "C": 3.20e8,
+    "cloud": 5.0e10,  # Tesla V100 instance
+}
+
+# Effective aggregate data-collection bandwidth, bytes/s.
+#   wan: devices -> remote cloud (Internet);  lan: devices -> local fogs.
+NETWORKS = {
+    "4g":   dict(wan=2.40e6, lan=5.00e6),   # fog collect ~36% of cloud
+    "5g":   dict(wan=1.92e6, lan=4.36e6),   # ~33% (67% cut)
+    "wifi": dict(wan=4.80e6, lan=9.23e6),   # ~39% (61% cut)
+}
+
+# Long-tail collection (paper SSVI "long-tail distribution of data
+# collection time", SSII-C "GNN execution is obliged to wait until all
+# correlated data points arrive"): the slowest of V device uploads grows
+# ~ln(V); WAN tails are an order of magnitude heavier than LAN.
+WAN_TAIL_S = 0.12
+LAN_TAIL_S = 0.015
+
+# Uncompressible per-vertex transport overhead (headers, ids, timestamps).
+PROTOCOL_BYTES_PER_VERTEX = 24.0
+
+DECOMPRESS_BYTES_PER_S = 200e6   # zlib inflate on fog CPU
+QUANTIZE_OVERHEAD_S = 2e-3       # device-side packing (parallelized, §III-D)
+DEFAULT_SYNC_COST = 0.10         # delta: one BSP synchronization (LAN round)
+CLOUD_RTT = 0.05
+
+
+# Per-fog allocated-bandwidth diversity (paper SSII: "their available
+# bandwidth allocated for serving also vary"): weak gateways sit on slower
+# uplinks than cloudlets. Factors are relative to the per-fog fair share.
+BANDWIDTH_FACTOR = {"A": 0.6, "B": 1.0, "C": 1.5}
+
+
+@dataclasses.dataclass
+class SimNode:
+    name: str
+    node_type: str
+    capability: float          # true flop/s (ground truth)
+    background_load: float = 0.0   # >=0; effective = capability/(1+load)
+
+    @property
+    def effective_capability(self) -> float:
+        return self.capability / (1.0 + self.background_load)
+
+    @property
+    def bandwidth_factor(self) -> float:
+        return BANDWIDTH_FACTOR.get(self.node_type, 1.0)
+
+
+def parse_cluster_spec(spec: str) -> List[str]:
+    """"1A+4B+1C" -> ['A','B','B','B','B','C']."""
+    out = []
+    for term in spec.split("+"):
+        term = term.strip()
+        count, t = int(term[:-1]), term[-1].upper()
+        out.extend([t] * count)
+    return out
+
+
+def multi_access_bandwidth(lan: float, n: int) -> float:
+    """Per-fog collection bandwidth with n access points: more fogs widen
+    total bandwidth sub-linearly (paper §II-C: 'widens the bandwidth and
+    relieves the networking contention')."""
+    total = lan * (1.0 + 0.25 * (n - 1))
+    return total / n
+
+
+def exec_flops(card, feature_dim: int, hidden: int, k_layers: int) -> float:
+    """Workload model shared by profiler and ground truth: per layer,
+    update matmuls ~ 2 V F H, aggregation ~ 8 |N_V| F."""
+    v, nv = card
+    return k_layers * (2.0 * v * feature_dim * hidden + 8.0 * nv * feature_dim)
+
+
+@dataclasses.dataclass
+class FogCluster:
+    nodes: List[SimNode]
+    network: str
+    graph: Graph
+    feature_dim: int
+    hidden: int
+    k_layers: int
+    sync_cost: float = DEFAULT_SYNC_COST
+    profile_noise: float = 0.03
+
+    def lan_bandwidth_per_fog(self) -> float:
+        return multi_access_bandwidth(NETWORKS[self.network]["lan"],
+                                      len(self.nodes))
+
+    def ground_truth_exec(self, node: SimNode, vertex_ids: np.ndarray) -> float:
+        card = cardinality_of(self.graph, vertex_ids)
+        return (exec_flops(card, self.feature_dim, self.hidden, self.k_layers)
+                / node.effective_capability + 1e-4)
+
+    def node_bandwidth(self, node: SimNode) -> float:
+        """Per-fog allocated bandwidth (fair share x type diversity,
+        renormalized so the cluster total is unchanged)."""
+        base = self.lan_bandwidth_per_fog()
+        mean_f = np.mean([n.bandwidth_factor for n in self.nodes])
+        return base * node.bandwidth_factor / mean_f
+
+    def fog_specs(self, seed: int = 0) -> List[FogSpec]:
+        """Profile every node (offline phase) and register metadata."""
+        specs = []
+        for j, node in enumerate(self.nodes):
+            rng = np.random.default_rng(seed + 1000 + j)
+
+            def measure_c(c, _cap=node.capability, _rng=rng):
+                t = (exec_flops(c, self.feature_dim, self.hidden,
+                                self.k_layers) / _cap + 1e-4)
+                if self.profile_noise:
+                    t *= float(1.0 + _rng.normal(scale=self.profile_noise))
+                return max(t, 1e-9)
+
+            model = profile_node_analytic(self.graph, measure_c, seed=seed + j)
+            specs.append(FogSpec(name=node.name,
+                                 bandwidth_bytes_per_s=self.node_bandwidth(
+                                     node),
+                                 latency_model=model))
+        return specs
+
+
+def make_cluster(spec: str, network: str, graph: Graph, *, hidden: int = 64,
+                 k_layers: int = 2, seed: int = 0,
+                 sync_cost: float = DEFAULT_SYNC_COST) -> FogCluster:
+    types = parse_cluster_spec(spec)
+    nodes = [SimNode(name=f"fog{j}({t})", node_type=t,
+                     capability=NODE_CAPABILITY[t])
+             for j, t in enumerate(types)]
+    return FogCluster(nodes=nodes, network=network, graph=graph,
+                      feature_dim=graph.feature_dim, hidden=hidden,
+                      k_layers=k_layers, sync_cost=sync_cost)
+
+
+# ----------------------------------------------------------------------------
+# Serving pipelines (latency + throughput accounting)
+# ----------------------------------------------------------------------------
+
+def _partition_wire_bytes(g: Graph, vertex_ids: np.ndarray,
+                          compress: Optional[str]) -> float:
+    overhead = len(vertex_ids) * PROTOCOL_BYTES_PER_VERTEX
+    raw = len(vertex_ids) * g.feature_dim * 8.0 + overhead
+    if compress is None or len(vertex_ids) == 0:
+        return raw
+    feats = g.features[vertex_ids].astype(np.float64)
+    degs = g.degrees[vertex_ids]
+    if compress == "daq":
+        return overhead + float(compression.daq_pack(feats, degs).nbytes(True))
+    if compress == "daq_noll":   # DAQ without the lossless stage
+        return overhead + float(compression.daq_pack(feats, degs, lossless=False)
+                                .nbytes(False))
+    if compress == "uniform8":
+        return overhead + float(compression.uniform_pack(feats, 8).nbytes(True))
+    raise ValueError(compress)
+
+
+@dataclasses.dataclass
+class ServingResult:
+    collect: np.ndarray      # per fog
+    execute: np.ndarray      # per fog (incl. sync)
+    unpack: np.ndarray       # per fog (pipelined; reported separately)
+    total_latency: float
+    throughput: float        # pipelined steady-state inferences/s
+    wire_bytes: float
+
+    def breakdown(self) -> Dict[str, float]:
+        per_fog = self.collect + self.execute
+        j = int(np.argmax(per_fog))
+        return {"collect": float(self.collect[j]),
+                "execute": float(self.execute[j]),
+                "total": self.total_latency}
+
+
+def simulate_cloud(cluster: FogCluster, *, compress: Optional[str] = None,
+                   congestion: float = 1.0) -> ServingResult:
+    """De-facto cloud serving: full upload over WAN, fast datacenter GPU."""
+    g = cluster.graph
+    wan = NETWORKS[cluster.network]["wan"]
+    all_v = np.arange(g.num_vertices)
+    wire = _partition_wire_bytes(g, all_v, compress)
+    tail = WAN_TAIL_S * np.log(max(g.num_vertices, 2))
+    collect = wire / wan * congestion + CLOUD_RTT + tail
+    cloud = SimNode("cloud", "cloud", NODE_CAPABILITY["cloud"])
+    exec_t = (exec_flops((g.num_vertices, 0), cluster.feature_dim,
+                         cluster.hidden, cluster.k_layers)
+              / cloud.effective_capability + 5e-3)
+    unpack = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
+    total = collect + exec_t + unpack
+    return ServingResult(np.array([collect]), np.array([exec_t]),
+                         np.array([unpack]), total,
+                         1.0 / max(collect, exec_t + unpack), wire)
+
+
+def simulate_single_fog(cluster: FogCluster, *,
+                        compress: Optional[str] = None) -> ServingResult:
+    """Single most-powerful fog node executes everything (paper §II-C)."""
+    g = cluster.graph
+    lan = NETWORKS[cluster.network]["lan"]
+    best = max(cluster.nodes, key=lambda nd: nd.effective_capability)
+    all_v = np.arange(g.num_vertices)
+    wire = _partition_wire_bytes(g, all_v, compress)
+    collect = wire / lan + LAN_TAIL_S * np.log(max(g.num_vertices, 2))
+    exec_t = cluster.ground_truth_exec(best, all_v)
+    unpack = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
+    total = collect + exec_t + unpack
+    return ServingResult(np.array([collect]), np.array([exec_t]),
+                         np.array([unpack]), total,
+                         1.0 / max(collect, exec_t + unpack), wire)
+
+
+def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
+                       compress: Optional[str] = None) -> ServingResult:
+    """Distributed BSP serving under a data placement (straw-man or IEP).
+
+    Latency = max_j (collect_j + exec_j) + K*delta sync (Eq. 6/7); unpack is
+    pipelined on a separate thread (§III-D) and overlaps execution, so only
+    its non-overlapped remainder counts.
+    """
+    g = cluster.graph
+    n = len(cluster.nodes)
+    collect = np.zeros(n)
+    exec_t = np.zeros(n)
+    unpack = np.zeros(n)
+    wire_total = 0.0
+    for j, node in enumerate(cluster.nodes):
+        mine = np.flatnonzero(placement.assignment == j)
+        if mine.size == 0:
+            continue
+        wire = _partition_wire_bytes(g, mine, compress)
+        wire_total += wire
+        bw = cluster.node_bandwidth(node)
+        collect[j] = (wire / bw + (QUANTIZE_OVERHEAD_S if compress else 0.0)
+                      + LAN_TAIL_S * np.log(max(len(mine), 2)))
+        exec_t[j] = (cluster.ground_truth_exec(node, mine)
+                     + cluster.k_layers * cluster.sync_cost)
+        unpack[j] = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
+        # Pipelined unpack: only the part not hidden by execution adds.
+        exec_t[j] += max(0.0, unpack[j] - exec_t[j]) * 0.0
+    per_fog = collect + exec_t
+    total = float(per_fog.max())
+    throughput = 1.0 / max(collect.max(), exec_t.max())
+    return ServingResult(collect, exec_t, unpack, total, throughput,
+                         wire_total)
+
+
+def apply_load_trace(cluster: FogCluster, loads: Sequence[float]) -> None:
+    for node, load in zip(cluster.nodes, loads):
+        node.background_load = float(load)
+
+
+def measured_exec_times(cluster: FogCluster, placement: Placement) -> np.ndarray:
+    """T_real per fog under current background loads (online profiler input)."""
+    out = np.zeros(len(cluster.nodes))
+    for j, node in enumerate(cluster.nodes):
+        mine = np.flatnonzero(placement.assignment == j)
+        if mine.size:
+            out[j] = (cluster.ground_truth_exec(node, mine)
+                      + cluster.k_layers * cluster.sync_cost)
+    return out

@@ -1,0 +1,99 @@
+"""Synthetic-corpus data pipeline: deterministic, shardable, shaped exactly
+like the dry-run's ``input_specs``.
+
+No tokenizer / corpus ships offline, so the pipeline generates a mixture of
+Zipfian token streams with Markov locality (so a real model can actually
+reduce loss on it) plus per-arch input adapters:
+  * tokens archs   -> {"inputs": int32 [B,S], "targets": int32 [B,S]}
+  * embeddings archs (VLM stub) -> {"inputs": f32 [B,S,D], "targets": ...}
+
+Batches come from an index-seeded PRNG: batch i is reproducible from (seed,
+i) alone, so the pipeline is stateless, resumable from a checkpointed step,
+and identical across hosts without any cross-host coordination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import numpy as np
+
+from repro.models.config import ArchConfig, InputShape
+
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    cfg: ArchConfig
+    shape: InputShape
+    seed: int = 0
+    zipf_a: float = 1.3
+    markov_jump: float = 0.15
+
+    def _rng(self, batch_idx: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, batch_idx))
+
+    def _token_batch(self, rng, b: int, s: int) -> np.ndarray:
+        v = self.cfg.vocab_size
+        # Zipf marginals, re-mapped into vocab range.
+        base = rng.zipf(self.zipf_a, size=(b, s + 1)).astype(np.int64)
+        base = base % v
+        # Markov locality: with prob 1-jump, next token = prev + small delta
+        # (gives learnable bigram structure).
+        stay = rng.random((b, s + 1)) > self.markov_jump
+        delta = rng.integers(1, 17, size=(b, s + 1))
+        toks = base.copy()
+        for t in range(1, s + 1):
+            toks[:, t] = np.where(stay[:, t],
+                                  (toks[:, t - 1] + delta[:, t]) % v,
+                                  base[:, t])
+        return toks
+
+    def batch(self, batch_idx: int) -> Dict[str, np.ndarray]:
+        rng = self._rng(batch_idx)
+        b, s = self.shape.global_batch, self.shape.seq_len
+        toks = self._token_batch(rng, b, s)
+        if self.cfg.input_mode == "embeddings":
+            # VLM/audio stub frontend: project token stream to embeddings
+            # deterministically (stands in for ViT patches / codec frames).
+            d = self.cfg.d_model
+            proj_rng = np.random.default_rng((self.seed, 2 ** 31))
+            proj = proj_rng.normal(size=(64, d)).astype(np.float32) * 0.02
+            inputs = proj[toks[:, :-1] % 64]
+            return {"inputs": inputs,
+                    "targets": toks[:, 1:].astype(np.int32)}
+        return {"inputs": toks[:, :-1].astype(np.int32),
+                "targets": toks[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        i = 0
+        while True:
+            yield self.batch(i)
+            i += 1
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *, batch_override=None):
+    """ShapeDtypeStruct stand-ins for every model input of (cfg, shape) —
+    the dry-run's only data source (no allocation).
+
+    train  -> {"inputs", "targets"}
+    prefill-> {"inputs"}
+    decode -> {"tokens" [B,1] (or embeddings), "pos" scalar} (+ caches are
+              built by the launcher via eval_shape on init_cache).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    if cfg.input_mode == "embeddings" and shape.kind != "decode":
+        inp = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    else:
+        inp = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        return {"inputs": inp,
+                "targets": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"inputs": inp}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,174 @@
+"""Full GNN models: K-layer stacks of Table-I layers + ASTGCN-lite.
+
+Includes a tiny full-batch trainer so accuracy experiments (paper Tables IV/V)
+run against *trained* models rather than random weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gnn.layers import (EdgeList, LAYER_FNS, aggregate_sum,
+                              aggregate_mean, masked_degree)
+
+
+def gnn_init(key, kind: str, dims: Sequence[int]) -> List[dict]:
+    """dims = [in, hidden..., out]; returns per-layer param list."""
+    init_fn, _ = LAYER_FNS[kind]
+    keys = jax.random.split(key, len(dims) - 1)
+    return [init_fn(k, dims[i], dims[i + 1]) for i, k in enumerate(keys)]
+
+
+def gnn_apply(params: List[dict], kind: str, h: jnp.ndarray, edges: EdgeList,
+              *, aggregate=None) -> jnp.ndarray:
+    """K-layer forward; last layer has no activation (logits)."""
+    _, layer_fn = LAYER_FNS[kind]
+    n = len(params)
+    for i, p in enumerate(params):
+        act = None if i == n - 1 else None
+        kwargs = {}
+        if aggregate is not None and kind in ("gcn", "sage"):
+            kwargs["aggregate"] = aggregate
+        if i == n - 1:
+            h = layer_fn(p, h, edges, activation=None, **kwargs)
+        else:
+            h = layer_fn(p, h, edges, **kwargs)
+    return h
+
+
+def num_layers(params) -> int:
+    return len(params)
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((logits.argmax(-1) == labels).astype(jnp.float32))
+
+
+def train_node_classifier(key, kind: str, graph, hidden: int = 64,
+                          steps: int = 120, lr: float = 5e-3,
+                          num_layers_: int = 2):
+    """Full-batch training of a K-layer GNN node classifier. Small graphs
+    only (used to produce trained weights for the accuracy benchmarks)."""
+    assert graph.labels is not None
+    nc = int(graph.labels.max()) + 1
+    dims = [graph.feature_dim] + [hidden] * (num_layers_ - 1) + [nc]
+    params = gnn_init(key, kind, dims)
+    edges = EdgeList.from_graph(graph)
+    h0 = jnp.asarray(graph.features)
+    y = jnp.asarray(graph.labels)
+
+    def loss_fn(p):
+        return cross_entropy(gnn_apply(p, kind, h0, edges), y)
+
+    @jax.jit
+    def step(p):
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree_util.tree_map(lambda w, g: w - lr * g, p, grads)
+        return p, loss
+
+    loss = None
+    for _ in range(steps):
+        params, loss = step(params)
+    return params, float(loss)
+
+
+# ----------------------------------------------------------------------------
+# ASTGCN-lite: spatial-temporal forecasting model (case study §IV-C).
+#
+# Faithful skeleton of Guo et al. AAAI'19: temporal attention + spatial
+# attention + graph convolution + temporal convolution, predicting
+# T_out=12 future flow values per sensor. Chebyshev convolution is
+# approximated by the first-order GCN aggregation (K=1), which is the
+# standard simplification (Kipf & Welling).
+# ----------------------------------------------------------------------------
+
+def astgcn_init(key, num_features: int, t_in: int, t_out: int,
+                hidden: int = 32):
+    ks = jax.random.split(key, 8)
+    glorot = lambda k, s: jax.random.normal(k, s) * (2.0 / sum(s[-2:])) ** 0.5
+    return {
+        # temporal attention over the T_in axis
+        "ta_q": glorot(ks[0], (num_features, hidden)),
+        "ta_k": glorot(ks[1], (num_features, hidden)),
+        # spatial gcn
+        "gc_w": glorot(ks[2], (num_features, hidden)),
+        "gc_b": jnp.zeros((hidden,)),
+        # temporal conv (kernel 3, same padding) over time
+        "tc_w": glorot(ks[3], (3 * hidden, hidden)),
+        "tc_b": jnp.zeros((hidden,)),
+        # output head: all T_in x hidden -> t_out
+        "out_w": glorot(ks[4], (t_in * hidden, t_out)),
+        "out_b": jnp.zeros((t_out,)),
+    }
+
+
+def astgcn_apply(params, history: jnp.ndarray, edges: EdgeList) -> jnp.ndarray:
+    """history: [T_in, V, F] -> forecast [T_out, V]."""
+    t_in, v, f = history.shape
+    x = history
+    # Temporal attention: weight timesteps per vertex.
+    q = jnp.einsum("tvf,fh->tvh", x, params["ta_q"])
+    k = jnp.einsum("tvf,fh->tvh", x, params["ta_k"])
+    att = jnp.einsum("tvh,svh->vts", q, k) / jnp.sqrt(q.shape[-1])
+    att = jax.nn.softmax(att, axis=-1)                    # [V, T, T]
+    x = jnp.einsum("vts,svf->tvf", att, x)
+    # Spatial graph convolution per timestep.
+    def spatial(h):  # [V, F]
+        a = aggregate_sum(h, edges)
+        deg = masked_degree(edges)
+        z = (a + h) / (deg + 1.0)[:, None]
+        return jax.nn.relu(z @ params["gc_w"] + params["gc_b"])
+    x = jax.vmap(spatial)(x)                              # [T, V, H]
+    # Temporal convolution (kernel=3, same) via unfold.
+    xp = jnp.pad(x, ((1, 1), (0, 0), (0, 0)))
+    stacked = jnp.concatenate([xp[:-2], xp[1:-1], xp[2:]], axis=-1)  # [T,V,3H]
+    x = jax.nn.relu(stacked @ params["tc_w"] + params["tc_b"])       # [T,V,H]
+    # Head: flatten time, predict T_out flows.
+    flat = x.transpose(1, 0, 2).reshape(v, -1)            # [V, T*H]
+    out = flat @ params["out_w"] + params["out_b"]        # [V, T_out]
+    return out.T                                          # [T_out, V]
+
+
+def train_astgcn(key, tg, steps: int = 200, lr: float = 1e-3, hidden: int = 32):
+    """Train ASTGCN-lite on a PeMS-style window (z-scored targets)."""
+    g = tg.graph
+    edges = EdgeList.from_graph(g)
+    hist = jnp.asarray(tg.history)
+    mu, sd = float(tg.target.mean()), float(tg.target.std() + 1e-6)
+    y = jnp.asarray((tg.target - mu) / sd)
+    params = astgcn_init(key, hist.shape[-1], hist.shape[0], y.shape[0], hidden)
+
+    def loss_fn(p, h):
+        pred = astgcn_apply(p, h, edges)
+        return jnp.mean((pred - y) ** 2)
+
+    @jax.jit
+    def step(p, h):
+        loss, grads = jax.value_and_grad(loss_fn)(p, h)
+        p = jax.tree_util.tree_map(lambda w, g_: w - lr * g_, p, grads)
+        return p, loss
+
+    loss = None
+    for _ in range(steps):
+        params, loss = step(params, hist)
+    return params, (mu, sd), float(loss)
+
+
+def forecast_errors(pred: np.ndarray, target: np.ndarray) -> Dict[str, float]:
+    """MAE / RMSE / MAPE as in paper Table V."""
+    pred = np.asarray(pred, np.float64)
+    target = np.asarray(target, np.float64)
+    err = pred - target
+    mae = float(np.abs(err).mean())
+    rmse = float(np.sqrt((err ** 2).mean()))
+    mape = float((np.abs(err) / np.maximum(np.abs(target), 1e-6)).mean() * 100)
+    return {"mae": mae, "rmse": rmse, "mape": mape}

@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (forward): online-softmax tiling so the
+[S, T] probability matrix never reaches HBM.
+
+Motivation straight from the roofline table (EXPERIMENTS.md §Roofline):
+every train/prefill combo is memory-bound because XLA materializes the
+chunked attention probabilities — e.g. deepseek-67b train_4k spends 67 s
+in the memory term vs 11.7 s compute. Flash tiling removes the prob
+traffic entirely: per (batch·head, q-block) grid step, K/V stream through
+VMEM in BK-sized tiles while running max/sum statistics rescale a VMEM
+accumulator (Dao et al., adapted to MXU 128-aligned tiles).
+
+Layout: q [BH, S, dh], k/v [BH, T, dh] (the ops.py wrapper folds batch and
+heads, expanding GQA kv heads to query heads). Causal masking is done with
+iota arithmetic inside the kernel; ``window > 0`` gives the banded variant
+(long_500k serve path). Validated in interpret mode against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  t: int, scale: float, causal: bool, window: int,
+                  q_offset_blocks: int):
+    j = pl.program_id(1)                      # q-block index
+    q = q_ref[...].astype(jnp.float32) * scale          # [BQ, dh]
+    q_pos = (j + q_offset_blocks) * bq + jax.lax.iota(jnp.int32, bq)
+
+    acc = jnp.zeros((bq, v_ref.shape[-1]), jnp.float32)
+    m_i = jnp.full((bq,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((bq,), jnp.float32)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_blk = k_ref[pl.dslice(kb * bk, bk), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(kb * bk, bk), :].astype(jnp.float32)
+        s = q @ k_blk.T                                   # [BQ, BK]
+        k_pos = kb * bk + jax.lax.iota(jnp.int32, bk)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            ok &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=1))
+        # guard fully-masked rows (exp(NEG_INF - NEG_INF) -> exp(0))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(ok, p, 0.0)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return acc, m_new, l_new
+
+    acc, m_i, l_i = jax.lax.fori_loop(0, t // bk, body, (acc, m_i, l_i))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal", "window",
+                                             "q_offset", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    bq: int = 128, bk: int = 128, causal: bool = True,
+                    window: int = 0, q_offset: int = 0,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [BH, S, dh], k/v [BH, T, dh] -> [BH, S, dv].
+
+    ``q_offset`` shifts query positions (chunked prefill: queries at
+    absolute positions q_offset..q_offset+S attending a length-T cache).
+    VMEM per grid step: BQ·dh + 2·BK·dh + BQ·dv floats — independent of T.
+    """
+    bh, s, dh = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    assert q_offset % bq == 0, "q_offset must be a multiple of bq"
+    grid = (bh, s // bq)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, t=t, scale=1.0 / np.sqrt(dh),
+        causal=causal, window=window, q_offset_blocks=q_offset // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def gqa_flash(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              window: int = 0, interpret: bool = True,
+              bq: int = 128, bk: int = 128) -> jnp.ndarray:
+    """Model-layout wrapper: q [B,S,H,dh], k/v [B,T,KV,dh] -> [B,S,H,dv].
+
+    Expands GQA kv heads to query heads (a view-cost copy here; on TPU the
+    kernel would index kv = h // group instead)."""
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, t, vx.shape[-1])
+    o = flash_attention(qf, kf, vf, window=window, interpret=interpret,
+                        bq=bq, bk=bk)
+    return o.reshape(b, h, s, -1).transpose(0, 2, 1, 3)

@@ -1,0 +1,99 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses: they handle host
+layout conversion (COO -> block-CSR, row quantization), padding, and
+un-padding, and fall back to interpret mode on CPU automatically (the
+kernels target TPU; `interpret=True` executes the same kernel body on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gnn.graph import Graph
+from repro.kernels import ref
+from repro.kernels.daq_dequant import dequant, dequant_spmm
+from repro.kernels.gather_aggregate import BLOCK, block_spmm, build_block_csr
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+class BlockCsr:
+    """Prepared adjacency for repeated kernel aggregations."""
+
+    def __init__(self, g: Graph, block: int = BLOCK,
+                 normalize: Optional[str] = None):
+        weights = None
+        if normalize == "mean":
+            deg = np.maximum(g.degrees[g.receivers], 1)
+            weights = (1.0 / deg).astype(np.float32)
+        blocks, cols, mask, padded_v = build_block_csr(
+            g.senders, g.receivers, g.num_vertices, block, weights)
+        self.block = block
+        self.num_vertices = g.num_vertices
+        self.padded_v = padded_v
+        self.blocks = jnp.asarray(blocks)
+        self.cols = jnp.asarray(cols)
+        self.mask = jnp.asarray(mask)
+
+    def pad_features(self, h: np.ndarray) -> jnp.ndarray:
+        v, f = h.shape
+        f_pad = -(-f // 128) * 128
+        out = np.zeros((self.padded_v, f_pad), np.float32)
+        out[:v, :f] = h
+        return jnp.asarray(out)
+
+    def aggregate(self, h: np.ndarray, interpret: Optional[bool] = None
+                  ) -> np.ndarray:
+        """sum-aggregate: returns [V, F] (unpadded)."""
+        if interpret is None:
+            interpret = not _on_tpu()
+        v, f = h.shape
+        hp = self.pad_features(np.asarray(h))
+        out = block_spmm(self.blocks, self.cols, self.mask, hp,
+                         interpret=interpret)
+        return np.asarray(out)[:v, :f]
+
+    def aggregate_quantized(self, codes: np.ndarray, scales: np.ndarray,
+                            mins: np.ndarray,
+                            interpret: Optional[bool] = None) -> np.ndarray:
+        """Fused dequant + sum-aggregate over quantized features."""
+        if interpret is None:
+            interpret = not _on_tpu()
+        v, f = codes.shape
+        f_pad = -(-f // 128) * 128
+        cp = np.zeros((self.padded_v, f_pad), codes.dtype)
+        cp[:v, :f] = codes
+        sp = np.zeros((self.padded_v,), np.float32)
+        sp[:v] = scales
+        mp = np.zeros((self.padded_v,), np.float32)
+        mp[:v] = mins
+        out = dequant_spmm(self.blocks, self.cols, self.mask,
+                           jnp.asarray(cp), jnp.asarray(sp), jnp.asarray(mp),
+                           interpret=interpret)
+        return np.asarray(out)[:v, :f]
+
+
+def dequantize_features(codes: np.ndarray, scales: np.ndarray,
+                        mins: np.ndarray,
+                        interpret: Optional[bool] = None) -> np.ndarray:
+    """Kernel-backed row-wise dequantization with pad/unpad handling."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    v, f = codes.shape
+    v_pad = -(-v // 256) * 256
+    f_pad = -(-f // 128) * 128
+    cp = np.zeros((v_pad, f_pad), codes.dtype)
+    cp[:v, :f] = codes
+    sp = np.zeros((v_pad,), np.float32)
+    sp[:v] = scales
+    mp = np.zeros((v_pad,), np.float32)
+    mp[:v] = mins
+    out = dequant(jnp.asarray(cp), jnp.asarray(sp), jnp.asarray(mp),
+                  interpret=interpret)
+    return np.asarray(out)[:v, :f]

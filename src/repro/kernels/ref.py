@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's exact input layout so tests can sweep
+shapes/dtypes and assert_allclose kernel-vs-oracle directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_spmm_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                   block_mask: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Block-CSR (ELL-over-blocks) SpMM: out = A @ h.
+
+    blocks:     f32[VB, M, B, B]  dense adjacency tiles (row-block major)
+    block_cols: i32[VB, M]        column-block index of each tile
+    block_mask: f32[VB, M]        1 for real tiles, 0 for padding
+    h:          f32[VB*B, F]      feature table
+    returns     f32[VB*B, F]
+    """
+    vb, m, b, _ = blocks.shape
+    f = h.shape[1]
+    hb = h.reshape(vb, b, f)
+
+    def row_block(i):
+        tiles = blocks[i]                      # [M, B, B]
+        cols = block_cols[i]                   # [M]
+        mask = block_mask[i]                   # [M]
+        gathered = hb[cols]                    # [M, B, F]
+        out = jnp.einsum("mij,mjf->if", tiles * mask[:, None, None], gathered)
+        return out
+
+    return jax.vmap(row_block)(jnp.arange(vb)).reshape(vb * b, f)
+
+
+def dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                mins: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise linear dequantization: out[v, f] = codes[v, f]*scale[v]+min[v].
+
+    codes: uint{8,16,32}[V, F];  scales/mins: f32[V].
+    """
+    return (codes.astype(jnp.float32) * scales[:, None] + mins[:, None])
+
+
+def dequant_spmm_ref(blocks, block_cols, block_mask, codes, scales,
+                     mins) -> jnp.ndarray:
+    """Fused dequant + aggregate: out = A @ dequant(codes)."""
+    h = dequant_ref(codes, scales, mins)
+    return block_spmm_ref(blocks, block_cols, block_mask, h)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Plain-softmax oracle for the flash kernel: q [BH,S,dh], k/v [BH,T,·]."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bsd,btd->bst", qf, kf) / jnp.sqrt(q.shape[-1])
+    sq, t = q.shape[1], k.shape[1]
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((sq, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok[None], p, 0.0)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST precede every other import (jax locks the
+# device count at first init). Hence no module docstring above them.
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production meshes, and extract the roofline terms from the compiled
+# artifact. MUST be a separate process from tests/benchmarks (the first two
+# lines force 512 host devices before jax initializes).
+#
+# Per combo this prints/records:
+#   * compiled.memory_analysis()  — bytes/device (proves the sharding fits)
+#   * compiled.cost_analysis()    — HLO FLOPs + bytes accessed
+#   * collective bytes parsed from the optimized HLO
+#   * the three roofline terms (seconds) + dominant bottleneck
+#   * MODEL_FLOPS = 6 N D (dense; N_active for MoE) vs HLO FLOPs ratio
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+#   python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import input_specs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import sharding as shd
+from repro.models import transformer as tf
+from repro.models.config import INPUT_SHAPES, ArchConfig
+from repro.optim.adamw import AdamW
+
+# Microbatch table: activation-memory control for train_4k (tokens/device
+# per microbatch <= ~16k for giants).
+def microbatches_for(cfg: ArchConfig, data_shards: int,
+                     global_batch: int) -> int:
+    per_dev = max(1, global_batch // max(data_shards, 1))
+    if cfg.d_model >= 6144:
+        want = 8
+    elif cfg.d_model >= 3072:
+        want = 4
+    else:
+        want = 2
+    while per_dev % want:
+        want //= 2
+    return max(1, want)
+
+
+def serve_window(cfg: ArchConfig, shape_name: str) -> int:
+    """long_500k uses the sliding-window serve variant for attention archs
+    (SSM/hybrid run natively; their attention window is already bounded)."""
+    if shape_name == "long_500k" and cfg.family not in ("ssm",):
+        return cfg.sliding_window or 0
+    return 0
+
+
+def _maybe(fn, *a, **k):
+    try:
+        return fn(*a, **k)
+    except Exception as e:  # noqa: BLE001 — diagnostics only
+        return f"<unavailable: {type(e).__name__}>"
+
+
+@dataclasses.dataclass
+class DryRunResult:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    ok: bool
+    error: str = ""
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collective: dict = dataclasses.field(default_factory=dict)
+    memory: dict = dataclasses.field(default_factory=dict)
+    model_flops: float = 0.0
+    roofline: dict = dataclasses.field(default_factory=dict)
+    cost_analysis_raw: dict = dataclasses.field(default_factory=dict)
+    opts: list = dataclasses.field(default_factory=list)
+
+
+def _memory_dict(compiled) -> dict:
+    ma = _maybe(compiled.memory_analysis)
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[f] = getattr(ma, f, None) if not isinstance(ma, str) else ma
+    if not isinstance(ma, str):
+        try:
+            args = ma.argument_size_in_bytes - ma.alias_size_in_bytes
+            out["peak_bytes_per_device"] = (args + ma.output_size_in_bytes
+                                            + ma.temp_size_in_bytes)
+        except Exception:  # noqa: BLE001
+            pass
+    return out
+
+
+def model_flops_estimate(cfg: ArchConfig, shape, mode: str) -> float:
+    """6 N_active D (train) / 2 N_active D (inference) token-FLOPs."""
+    n = cfg.active_param_count()
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def build_lowerable(cfg: ArchConfig, shape_name: str, mesh, opts=()):
+    """Returns (fn, args, in_shardings, mode) ready for jit/lower.
+
+    ``opts`` — SSPerf variants: "serve_attn_dh" (head_dim-sharded attention
+    projections for kv-indivisible serving), "quant_cache" (int8 KV cache),
+    "expert_grid" (experts over the full data x model grid).
+    """
+    opts = set(opts)
+    shape = INPUT_SHAPES[shape_name]
+    # Pin residual-stream batch sharding (see models/sharding.py).
+    data_ax = shd.data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in data_ax]))
+    seq_par = "seq_parallel" in opts and shape.kind != "decode"
+    if shape.global_batch % max(total, 1) == 0 and shape.global_batch >= total:
+        shd.enable_activation_constraints(data_ax, seq_parallel=seq_par)
+    elif shape.global_batch % mesh.shape.get("data", 1) == 0 \
+            and shape.global_batch >= mesh.shape.get("data", 1):
+        shd.enable_activation_constraints(("data",), seq_parallel=seq_par)
+    else:
+        shd.enable_activation_constraints(None)
+    if shape.kind != "train":
+        # Serving runs bf16 weights (f32 weights of a 67B model would not
+        # fit 16-way TP on 16 GB chips; bf16 serving is standard practice).
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    params_abs = tf.abstract_params(cfg)
+    fsdp = shd.needs_fsdp(cfg, mesh, train=shape.kind == "train")
+    if "expert_grid" in opts and cfg.num_experts:
+        fsdp_dense = fsdp  # dense weights may still need FSDP
+        p_shard = shd.param_shardings(cfg, params_abs, mesh, fsdp=fsdp_dense,
+                                      serve_attn_dh="serve_attn_dh" in opts,
+                                      expert_grid=True)
+    else:
+        p_shard = shd.param_shardings(cfg, params_abs, mesh, fsdp=fsdp,
+                                      serve_attn_dh="serve_attn_dh" in opts)
+    window = serve_window(cfg, shape_name)
+
+    if shape.kind == "train":
+        moment_dtype = ("bfloat16" if cfg.param_count() > 1.5e11
+                        else "float32")
+        opt = AdamW(learning_rate=3e-4, moment_dtype=moment_dtype)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        from repro.optim.adamw import AdamWState
+        o_shard = AdamWState(
+            step=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+            m=p_shard, v=p_shard)
+        # ^ moments mirror params exactly; the scalar step replicates
+        data_shards = int(np.prod([mesh.shape[a]
+                                   for a in shd.data_axes(mesh)]))
+        mb = microbatches_for(cfg, data_shards, shape.global_batch)
+        batch_abs = input_specs(cfg, shape)
+        b_shard = shd.batch_shardings(mesh, batch_abs)
+        step = tf.make_train_step(cfg, opt, microbatches=mb, remat=True)
+        return (step, (params_abs, opt_abs, batch_abs),
+                (p_shard, o_shard, b_shard), "train", {"microbatches": mb})
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        b_shard = shd.batch_shardings(mesh, batch_abs)
+
+        def prefill_fn(params, batch):
+            logits, caches = tf.prefill(params, cfg, batch["inputs"],
+                                        window=window)
+            return logits, caches
+
+        return (prefill_fn, (params_abs, batch_abs), (p_shard, b_shard),
+                "prefill", {})
+
+    # decode
+    batch_abs = input_specs(cfg, shape)
+    cache_window = window
+    cache_abs = jax.eval_shape(
+        functools.partial(tf.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, window=cache_window,
+                          quantized="quant_cache" in opts))
+    c_shard = shd.cache_shardings(cfg, cache_abs, mesh, shape.global_batch)
+    b_shard = shd.batch_shardings(mesh, batch_abs)
+
+    def decode_fn(params, caches, batch):
+        return tf.decode_step(params, cfg, caches, batch["tokens"],
+                              batch["pos"], window=window)
+
+    return (decode_fn, (params_abs, cache_abs, batch_abs),
+            (p_shard, c_shard, b_shard), "decode", {})
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            verbose: bool = True, hlo_out: str = "",
+            opts=()) -> DryRunResult:
+    cfg = registry.get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    res = DryRunResult(arch=arch, shape=shape_name, mesh=mesh_name, mode="",
+                       ok=False)
+    res.opts = list(opts)
+    try:
+        fn, args, in_shardings, mode, extra = build_lowerable(
+            cfg, shape_name, mesh, opts=opts)
+        res.mode = mode
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_shardings)
+            lowered = jitted.lower(*args)
+            res.lower_s = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            res.compile_s = time.time() - t0
+        ca = _maybe(compiled.cost_analysis)
+        if isinstance(ca, dict):
+            # raw XLA numbers (while bodies counted ONCE — see hlo_analysis)
+            res.cost_analysis_raw = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0))}
+        res.memory = _memory_dict(compiled)
+        hlo = _maybe(compiled.as_text)
+        if isinstance(hlo, str) and not hlo.startswith("<unavailable"):
+            cost = hlo_analysis.analyze(hlo)
+            res.flops_per_device = cost.flops
+            res.bytes_per_device = cost.bytes_accessed
+            res.collective = dict(cost.collective_bytes,
+                                  total=cost.total_collective)
+            if hlo_out:
+                with open(hlo_out, "w") as f:
+                    f.write(hlo)
+        shape = INPUT_SHAPES[shape_name]
+        res.model_flops = model_flops_estimate(cfg, shape, mode)
+        # Roofline terms (seconds). cost_analysis flops/bytes are per-device
+        # for the SPMD partitioned module.
+        comp = res.flops_per_device / PEAK_FLOPS_BF16
+        memt = res.bytes_per_device / HBM_BW
+        coll = res.collective.get("total", 0) / ICI_BW
+        dom = max(("compute", comp), ("memory", memt),
+                  ("collective", coll), key=lambda kv: kv[1])[0]
+        res.roofline = {
+            "compute_s": comp, "memory_s": memt, "collective_s": coll,
+            "dominant": dom,
+            "model_flops_ratio": (res.model_flops
+                                  / max(res.flops_per_device * n_chips, 1.0)),
+        }
+        res.ok = True
+        if verbose:
+            print(f"[OK] {arch} x {shape_name} x {mesh_name} ({mode}"
+                  f"{', mb=' + str(extra['microbatches']) if extra.get('microbatches') else ''}) "
+                  f"lower {res.lower_s:.1f}s compile {res.compile_s:.1f}s")
+            print(f"     flops/dev={res.flops_per_device:.3e} "
+                  f"bytes/dev={res.bytes_per_device:.3e} "
+                  f"coll/dev={res.collective.get('total', 0):.3e}")
+            print(f"     roofline: compute={comp * 1e3:.2f}ms "
+                  f"memory={memt * 1e3:.2f}ms collective={coll * 1e3:.2f}ms "
+                  f"-> {dom}-bound; useful-flop ratio="
+                  f"{res.roofline['model_flops_ratio']:.3f}")
+            print(f"     memory/device: {res.memory}")
+    except Exception as e:  # noqa: BLE001
+        res.error = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: {res.error}")
+            traceback.print_exc(limit=4)
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo-dir", default="")
+    ap.add_argument("--opts", default="",
+                    help="comma list: serve_attn_dh,quant_cache,expert_grid")
+    args = ap.parse_args(argv)
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    archs = registry.list_archs() if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                hlo_out = ""
+                if args.hlo_dir:
+                    os.makedirs(args.hlo_dir, exist_ok=True)
+                    hlo_out = os.path.join(
+                        args.hlo_dir,
+                        f"{registry.canonical(arch)}_{shape}_"
+                        f"{'mp' if mp else 'sp'}.hlo")
+                res = run_one(arch, shape, multi_pod=mp, hlo_out=hlo_out,
+                              opts=opts)
+                failures += 0 if res.ok else 1
+                suffix = ("_" + "_".join(opts)) if opts else ""
+                fname = (f"{registry.canonical(arch)}_{shape}_"
+                         f"{'2x16x16' if mp else '16x16'}{suffix}.json")
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(dataclasses.asdict(res), f, indent=2,
+                              default=str)
+    print(f"\ndry-run complete: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,338 @@
+"""Attention mixers: GQA (with RoPE / bias / sliding window / local banding)
+and MLA (DeepSeek-V3 latent attention with compressed KV cache).
+
+Three execution modes share each mixer's parameters:
+  * ``forward``      — full-sequence causal attention (train / prefill)
+  * ``decode``       — one token against a KV cache (decode_32k)
+  * windowed decode  — ring-buffer cache of ``window`` entries (long_500k)
+
+Caches are explicit pytrees so lax.scan can carry them through stacked
+layers, and their shardings are set by the same path rules as parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, init_linear, linear
+
+NEG_INF = -2.0e38
+
+
+# ----------------------------------------------------------------------------
+# GQA
+# ----------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    sc = (2.0 / (d + h * dh)) ** 0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, dh), dtype) * sc,
+        "wk": jax.random.normal(ks[1], (d, kv, dh), dtype) * sc,
+        "wv": jax.random.normal(ks[2], (d, kv, dh), dtype) * sc,
+        "wo": jax.random.normal(ks[3], (h, dh, d), dtype) * sc,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kv, dh), dtype)
+        p["bv"] = jnp.zeros((kv, dh), dtype)
+    return p
+
+
+def _qkv(params, x, cfg: ArchConfig, positions):
+    dt = x.dtype  # keep projections in activation dtype (bf16 in prod)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, num_kv_groups: int):
+    """q [B,S,H,dh], k/v [B,T,KV,dh], additive mask broadcastable to
+    [B,KV,G,S,T]. Direct (unchunked) path — used for decode (S=1)."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    q = q.reshape(b, s, kvh, num_kv_groups, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(dh)
+    scores = scores + mask                       # mask broadcast [B,1,1,S,T]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+DEFAULT_Q_CHUNK = 512
+
+
+def chunked_causal_attention(q, k, v, num_kv_groups: int, *, window: int = 0,
+                             q_chunk: int = DEFAULT_Q_CHUNK):
+    """Blockwise causal attention: scan over query chunks so peak score
+    memory is [B,KV,G,QC,T] instead of [B,KV,G,S,S]; the mask is computed
+    from iotas (never a materialized S x S table)."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = num_kv_groups
+    qc = min(q_chunk, s)
+    if s % qc:
+        qc = s  # fallback: irregular sizes go unchunked
+    n_chunks = s // qc
+    qs = q.reshape(b, n_chunks, qc, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    j = jnp.arange(t)
+
+    def one_chunk(ci, q_blk):
+        # q_blk [B,QC,KV,G,dh]
+        i = ci * qc + jnp.arange(qc)
+        ok = j[None, :] <= i[:, None]
+        if window:
+            ok &= j[None, :] > (i[:, None] - window)
+        m = jnp.where(ok, 0.0, NEG_INF)[None, None, None]   # [1,1,1,QC,T]
+        scores = jnp.einsum("bskgd,btkd->bkgst", q_blk, k,
+                            preferred_element_type=jnp.float32) / np.sqrt(dh)
+        probs = jax.nn.softmax(scores + m, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v)      # [B,QC,KV,G,dh]
+        return out
+
+    def scan_body(ci, q_blk):
+        return ci + 1, one_chunk(ci, q_blk)
+
+    # scan with a counter carry (not an iota xs): mixing a replicated iota
+    # into the xs tuple makes GSPMD replicate the whole loop batch.
+    _, outs = jax.lax.scan(scan_body, jnp.zeros((), jnp.int32), qs)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dv)
+    return out
+
+
+def causal_mask(s: int, window: int = 0) -> jnp.ndarray:
+    """[1,1,1,S,S] additive causal (optionally banded) mask."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    ok = j <= i
+    if window:
+        ok &= j > i - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+
+
+def gqa_forward(params, x, cfg: ArchConfig, *, window: int = 0,
+                positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions)
+    if cfg.attn_impl == "flash":
+        from repro.kernels.flash_attention import gqa_flash
+        out = gqa_flash(q, k, v, window=window,
+                        interpret=jax.default_backend() != "tpu")
+    else:
+        out = chunked_causal_attention(q, k, v,
+                                       cfg.num_heads // cfg.num_kv_heads,
+                                       window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # [B, T, KV, dh]
+    v: jnp.ndarray       # [B, T, KV, dh]
+
+    @classmethod
+    def zeros(cls, b, t, kv, dh, dtype):
+        return cls(jnp.zeros((b, t, kv, dh), dtype),
+                   jnp.zeros((b, t, kv, dh), dtype))
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) scales — Fograph's degree-aware
+    quantization (SSIII-D) transplanted to the dominant serving payload.
+    4x less cache HBM residency; dequantization fuses into the VMEM tile
+    stream on TPU (see kernels/daq_dequant.py for the fused pattern)."""
+    k_q: jnp.ndarray       # int8 [B, T, KV, dh]
+    v_q: jnp.ndarray       # int8 [B, T, KV, dh]
+    k_scale: jnp.ndarray   # f32  [B, T, KV]
+    v_scale: jnp.ndarray   # f32  [B, T, KV]
+
+    @classmethod
+    def zeros(cls, b, t, kv, dh, dtype=None):
+        return cls(jnp.zeros((b, t, kv, dh), jnp.int8),
+                   jnp.zeros((b, t, kv, dh), jnp.int8),
+                   jnp.zeros((b, t, kv), jnp.float32),
+                   jnp.zeros((b, t, kv), jnp.float32))
+
+
+def _quantize_heads(x):
+    """x [B,S,KV,dh] -> (int8 codes, f32 scales [B,S,KV])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_heads(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def gqa_decode(params, x, cache, pos, cfg: ArchConfig, *,
+               window: int = 0):
+    """One-token decode. ``pos`` int32[] absolute position. With window>0
+    the cache is a ring buffer of ``window`` entries. Accepts KVCache or
+    QuantKVCache (int8 + scales)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)     # [B,1,·,dh]
+    t = (cache.k if isinstance(cache, KVCache) else cache.k_q).shape[1]
+    slot = (pos % window) if window else pos
+    if isinstance(cache, QuantKVCache):
+        kq, ks = _quantize_heads(k)
+        vq, vs = _quantize_heads(v)
+        dus = jax.lax.dynamic_update_slice_in_dim
+        new_cache = QuantKVCache(
+            dus(cache.k_q, kq, slot, 1), dus(cache.v_q, vq, slot, 1),
+            dus(cache.k_scale, ks, slot, 1), dus(cache.v_scale, vs, slot, 1))
+        k_full = _dequantize_heads(new_cache.k_q, new_cache.k_scale, x.dtype)
+        v_full = _dequantize_heads(new_cache.v_q, new_cache.v_scale, x.dtype)
+    else:
+        k = k.astype(cache.k.dtype)
+        v = v.astype(cache.v.dtype)
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        new_cache = KVCache(new_k, new_v)
+        k_full, v_full = new_k, new_v
+    idx = jnp.arange(t)
+    if window:
+        valid = idx < jnp.minimum(pos + 1, window)
+    else:
+        valid = idx <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    out = _sdpa(q, k_full, v_full, mask, cfg.num_heads // cfg.num_kv_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------------
+# MLA (DeepSeek-V3, arXiv:2412.19437 §2.1)
+# ----------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.num_heads
+    r_q = cfg.q_lora_rank or 0
+    r_kv = cfg.kv_lora_rank
+    qk_n, qk_r, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    sc = lambda i, o: (2.0 / (i + o)) ** 0.5
+    p = {}
+    if r_q:
+        p["wq_a"] = jax.random.normal(ks[0], (d, r_q), dtype) * sc(d, r_q)
+        p["wq_b"] = jax.random.normal(ks[1], (r_q, h, qk_n + qk_r),
+                                      dtype) * sc(r_q, h * (qk_n + qk_r))
+    else:
+        p["wq"] = jax.random.normal(ks[1], (d, h, qk_n + qk_r),
+                                    dtype) * sc(d, h * (qk_n + qk_r))
+    # KV joint compression: c_kv = x @ wkv_a[:, :r_kv]; k_rope shared 1 head.
+    p["wkv_a"] = jax.random.normal(ks[2], (d, r_kv + qk_r),
+                                   dtype) * sc(d, r_kv + qk_r)
+    p["wk_b"] = jax.random.normal(ks[3], (r_kv, h, qk_n),
+                                  dtype) * sc(r_kv, h * qk_n)
+    p["wv_b"] = jax.random.normal(ks[4], (r_kv, h, dv),
+                                  dtype) * sc(r_kv, h * dv)
+    p["wo"] = jax.random.normal(ks[5], (h, dv, d), dtype) * sc(h * dv, d)
+    return p
+
+
+def _mla_q(params, x, cfg: ArchConfig, positions):
+    dt = x.dtype
+    qk_n, qk_r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "wq_a" in params:
+        q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dt))
+        q = jnp.einsum("bsr,rhk->bshk", q, params["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(params, x, cfg: ArchConfig, *, window: int = 0,
+                positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence MLA (naive/uncompressed materialization)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    qk_n, qk_r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    r_kv = cfg.kv_lora_rank
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    c_kv, k_rope = ckv[..., :r_kv], ckv[..., r_kv:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(dt))
+    # Fold the rope part into a combined head dim and reuse the chunked
+    # path; its 1/sqrt(qk_n + qk_r) scale is exactly MLA's.
+    q_all = jnp.concatenate([q_nope, q_rope], axis=-1)
+    h = q_nope.shape[2]
+    k_all = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(k_rope, (b, s, h, qk_r))],
+                            axis=-1)
+    out = chunked_causal_attention(q_all, k_all, v, 1, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # [B, T, r_kv]   compressed latent
+    k_rope: jnp.ndarray   # [B, T, qk_rope]
+
+    @classmethod
+    def zeros(cls, b, t, r_kv, qk_r, dtype):
+        return cls(jnp.zeros((b, t, r_kv), dtype),
+                   jnp.zeros((b, t, qk_r), dtype))
+
+
+def mla_decode(params, x, cache: MLACache, pos, cfg: ArchConfig, *,
+               window: int = 0) -> Tuple[jnp.ndarray, MLACache]:
+    """Weight-absorbed decode: attention runs in the latent space, so the
+    cache stores only (r_kv + qk_rope) per token — MLA's whole point."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    qk_n, qk_r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    r_kv = cfg.kv_lora_rank
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)   # [B,1,H,·]
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    c_new, kr_new = ckv[..., :r_kv], ckv[..., r_kv:]
+    kr_new = apply_rope(kr_new[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+    t = cache.c_kv.shape[1]
+    slot = (pos % window) if window else pos
+    c_new = c_new.astype(cache.c_kv.dtype)
+    kr_new = kr_new.astype(cache.k_rope.dtype)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, slot, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, slot, 1)
+    # Absorb wk_b into the query: q_lat [B,1,H,r_kv].
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"].astype(dt))
+    scale = 1.0 / np.sqrt(qk_n + qk_r)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    idx = jnp.arange(t)
+    valid = (idx < jnp.minimum(pos + 1, window)) if window else (idx <= pos)
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    attn_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)     # [B,1,H,r_kv]
+    out = jnp.einsum("bshr,rhk->bshk", attn_lat, params["wv_b"].astype(dt))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, MLACache(c_kv, k_rope)

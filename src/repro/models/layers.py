@@ -1,0 +1,119 @@
+"""Shared neural layers: norms, positional encodings, dense FFNs.
+
+Everything is a pure function over explicit param pytrees (dicts), so stages
+stack/scan cleanly and shardings attach via path-based rules
+(models/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return out.astype(dt) * scale.astype(dt)
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embedding
+# ----------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; positions: [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """[..., S] -> [..., S, D] fixed sinusoidal table (musicgen-style)."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Dense FFN (gated SwiGLU/GeGLU or plain 2-matrix MLP)
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    sc_in = (2.0 / (d_model + d_ff)) ** 0.5
+    p = {"w_up": jax.random.normal(ks[0], (d_model, d_ff), dtype) * sc_in,
+         "w_down": jax.random.normal(ks[1], (d_ff, d_model), dtype) * sc_in}
+    if gated:
+        p["w_gate"] = jax.random.normal(ks[2], (d_model, d_ff), dtype) * sc_in
+    return p
+
+
+def mlp(params, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    dt = x.dtype
+    up = x @ params["w_up"].astype(dt)
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"].astype(dt)) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"].astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["table"][tokens]
+
+
+def unembed(params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["table"].T
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False):
+    sc = (2.0 / (d_in + d_out)) ** 0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * sc}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,307 @@
+"""Path/shape-based sharding rules for params, optimizer state, caches, and
+batches on the production meshes.
+
+Philosophy (MaxText-style): a small table maps parameter *names* to the
+logical dimension that carries model parallelism; dimensions shard on the
+``model`` axis only when evenly divisible (GSPMD could pad, but uneven
+shards waste the padded fraction on every op — we replicate instead and
+note it). Batch axes shard over (``pod``,) ``data``. Optimizer moments
+inherit their parameter's spec verbatim; decode caches shard batch on data
+and heads/state on model.
+
+Negative dim indices make the rules agnostic to the leading stage-stacking
+axis that lax.scan adds.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+# name -> candidate (negative) dims for the `data` axis under FSDP
+# (ZeRO-3-style): the dim NOT taken by model parallelism, so giants shard
+# over the full chip grid. Weight all-gathers are inserted by GSPMD.
+_FSDP_DIM_RULES: Dict[str, Tuple[int, ...]] = {
+    "wq": (-3,), "wk": (-3,), "wv": (-3,), "wo": (-1,),
+    "wq_a": (-2,), "wq_b": (-3,), "wkv_a": (-2,), "wk_b": (-3,),
+    "wv_b": (-3,),
+    "w_gate": (-2,), "w_up": (-2,), "w_down": (-1,),
+    "in_proj": (-2,), "x_proj": (-1,), "dt_proj": (-2,),
+    "out_proj": (-1,),
+    "in_x": (-2,), "in_gate": (-2,), "out": (-1,),
+    "table": (-1,), "w": (-2,),
+}
+
+# name -> candidate (negative) dims to try sharding on `model`, in order.
+_MODEL_DIM_RULES: Dict[str, Tuple[int, ...]] = {
+    # attention
+    "wq": (-2,), "wk": (-2,), "wv": (-2,), "wo": (-3,),
+    "bq": (-2,), "bk": (-2,), "bv": (-2,),
+    # MLA
+    "wq_a": (), "wq_b": (-2,), "wkv_a": (), "wk_b": (-2,), "wv_b": (-2,),
+    # dense mlp (also MoE shared expert)
+    "w_gate": (-1,), "w_up": (-1,), "w_down": (-2,),
+    # moe router
+    "router": (),
+    # mamba
+    "in_proj": (-1,), "conv_w": (-1,), "conv_b": (-1,),
+    "x_proj": (-2,), "dt_proj": (-1,), "dt_bias": (-1,),
+    "a_log": (-2,), "d_skip": (-1,), "out_proj": (-2,),
+    # rglru
+    "in_x": (-1,), "in_gate": (-1,), "w_input_gate": (-1,),
+    "w_rec_gate": (-1,), "lambda_p": (-1,), "out": (-2,),
+    # embedding / head
+    "table": (-2,), "w": (-1,), "b": (-1,),
+    # norms
+    "norm1": (), "norm2": (), "final_norm": (), "scale": (),
+}
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+# Serving variant (§Perf iteration): shard attention projections on the
+# head_dim instead of heads, so kv-indivisible GQA decodes with partial
+# scores + a small all-reduce instead of all-gathering the KV cache.
+_ATTN_DH_RULES: Dict[str, Tuple[int, ...]] = {
+    "wq": (-1,), "wk": (-1,), "wv": (-1,), "wo": (-2,),
+    "bq": (-1,), "bk": (-1,), "bv": (-1,),
+}
+
+
+def _spec_for_param(path, shape, cfg: ArchConfig, model_size: int,
+                    fsdp_axes: Tuple[str, ...] = (),
+                    serve_attn_dh: bool = False,
+                    expert_grid: bool = False) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    ndim = len(shape)
+    spec = [None] * ndim
+    # MoE expert weights: leading expert dim takes priority.
+    if cfg.num_experts and "ffn" in names and name in ("w_gate", "w_up",
+                                                       "w_down"):
+        # stacked moe expert weights: [..., E, d, f] — find the expert dim.
+        grid = 1
+        for a in ("data", "model"):
+            grid *= _FSDP_SIZE.get(a, 1)
+        for ax in range(ndim):
+            # the expert dim is the 3rd-from-last at most (E, d, f tail)
+            if shape[ax] == cfg.num_experts and ndim - ax == 3:
+                if expert_grid and cfg.num_experts % grid == 0:
+                    # one expert (group) per chip: token all-to-all replaces
+                    # FSDP weight gathers entirely (§Perf pair B)
+                    spec[ax] = ("data", "model")
+                    return P(*spec)
+                if cfg.num_experts % model_size == 0:
+                    spec[ax] = "model"
+                break  # found the expert dim (sharded or indivisible)
+    rules = _MODEL_DIM_RULES
+    if serve_attn_dh and cfg.num_kv_heads and \
+            cfg.num_kv_heads % model_size != 0 and name in _ATTN_DH_RULES:
+        rules = {**_MODEL_DIM_RULES, **_ATTN_DH_RULES}
+    if not any(spec):
+        for nd in rules.get(name, ()):
+            ax = ndim + nd
+            if 0 <= ax < ndim and shape[ax] % model_size == 0 \
+                    and shape[ax] >= model_size:
+                spec[ax] = "model"
+                break
+    if fsdp_axes:
+        import numpy as _np
+        fs = 1
+        for a in fsdp_axes:
+            fs *= _FSDP_SIZE.get(a, 1)
+        for nd in _FSDP_DIM_RULES.get(name, ()):
+            ax = ndim + nd
+            if 0 <= ax < ndim and spec[ax] is None                     and shape[ax] % fs == 0 and shape[ax] >= fs:
+                spec[ax] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+    return P(*spec)
+
+
+_FSDP_SIZE: Dict[str, int] = {}
+
+
+def param_shardings(cfg: ArchConfig, params_abstract, mesh: Mesh,
+                    fsdp: bool = False, serve_attn_dh: bool = False,
+                    expert_grid: bool = False):
+    """NamedSharding pytree for a param (or optimizer-moment) pytree.
+
+    ``fsdp=True`` additionally shards a second weight dim over the data
+    (and pod) axes — required for the giants (grok-1, deepseek-v3) whose
+    TP-only shards exceed HBM. ``serve_attn_dh`` / ``expert_grid`` are the
+    SSPerf serving variants (see EXPERIMENTS.md).
+    """
+    model_size = mesh.shape["model"]
+    fsdp_axes = data_axes(mesh) if fsdp else ()
+    for a in mesh.shape:
+        _FSDP_SIZE[a] = mesh.shape[a]
+
+    def one(path, leaf):
+        spec = _spec_for_param(path, leaf.shape, cfg, model_size, fsdp_axes,
+                               serve_attn_dh=serve_attn_dh,
+                               expert_grid=expert_grid)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def needs_fsdp(cfg: ArchConfig, mesh: Mesh, train: bool) -> bool:
+    """Do TP-only weights (+moments at train) overflow a 16 GB chip?"""
+    bytes_per_param = {"float32": 4, "bfloat16": 2}[cfg.param_dtype]
+    if train:
+        bytes_per_param += 2 * (2 if cfg.param_count() > 1.5e11 else 4)
+    per_dev = cfg.param_count() * bytes_per_param / mesh.shape["model"]
+    return per_dev > 8e9
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, rank: int,
+               batch_axis: int = 0) -> P:
+    """Shard the batch dim over (pod, data) when divisible, else replicate."""
+    axes = data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    spec = [None] * rank
+    if global_batch % total == 0 and global_batch >= total:
+        spec[batch_axis] = axes
+    elif "data" in mesh.shape and global_batch % mesh.shape["data"] == 0 \
+            and global_batch >= mesh.shape["data"]:
+        spec[batch_axis] = "data"
+    return P(*spec)
+
+
+def batch_shardings(mesh: Mesh, batch_abstract):
+    def one(leaf):
+        rank = len(leaf.shape)
+        if rank == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, batch_spec(mesh, leaf.shape[0], rank))
+
+    return jax.tree_util.tree_map(one, batch_abstract)
+
+
+def cache_shardings(cfg: ArchConfig, cache_abstract, mesh: Mesh,
+                    global_batch: int):
+    """Decode-cache shardings: axis 1 is batch (axis 0 = stage stacking);
+    kv-heads / state dims go on `model` when divisible."""
+    model_size = mesh.shape["model"]
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        rank = len(shape)
+        spec = [None] * rank
+        # batch axis: stacked caches are [R, B, ...]; unstacked [B, ...].
+        baxis = 1 if rank >= 2 and shape[0] != global_batch else 0
+        if name in ("k_scale", "v_scale"):
+            # quant-cache scales: small, batch-sharded only (their KV dim
+            # is usually indivisible and time must stay local for the
+            # ring-buffer update)
+            bspec = batch_spec(mesh, shape[baxis], rank, baxis)                 if rank > baxis else P()
+            return NamedSharding(mesh, bspec)
+        if rank > baxis:
+            bspec = batch_spec(mesh, shape[baxis], rank, baxis)
+            spec = list(bspec)
+        # model axis: try kv-heads ([..., KV, dh] -> -2) then trailing
+        # state dims (mamba d_inner at -2 for ssm, -1 for conv; rglru w
+        # at -1).
+        sharded_model = False
+        for nd in (-2, -1):
+            ax = rank + nd
+            if ax <= baxis or spec[ax] is not None:
+                continue
+            dim = shape[ax]
+            if dim % model_size == 0 and dim >= model_size and dim not in (
+                    cfg.head_dim, cfg.qk_rope_head_dim):
+                # shard the first eligible (heads / d_inner / width) dim
+                if (nd == -2 and dim in (cfg.num_kv_heads, cfg.ssm_d_inner)
+                        ) or (nd == -1 and dim in (
+                            cfg.ssm_d_inner, cfg.rglru_width,
+                            cfg.kv_lora_rank)):
+                    spec[ax] = "model"
+                    sharded_model = True
+                    break
+        if not sharded_model and rank >= 3:
+            # Feature-sharded KV cache: when kv-heads don't divide the model
+            # axis (kv=8 vs 16, MQA kv=1, MLA latent), shard the trailing
+            # feature dim (head_dim / kv_lora_rank / rope dim) instead. The
+            # QK contraction over the sharded dim lowers to partial scores +
+            # one small all-reduce per layer, while the ring-buffer
+            # dynamic-update-slice stays LOCAL (sharding the time axis would
+            # turn the O(1) append into an O(cache) masked rewrite).
+            lax_ = rank - 1
+            if spec[lax_] is None and shape[lax_] % model_size == 0 \
+                    and shape[lax_] >= model_size:
+                spec[lax_] = "model"
+            else:
+                tax = baxis + 1
+                if spec[tax] is None and shape[tax] % model_size == 0 \
+                        and shape[tax] >= 1024:
+                    spec[tax] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ----------------------------------------------------------------------------
+# Activation sharding constraints (enabled by the launcher; no-ops in plain
+# CPU tests). GSPMD propagation alone can drop the batch sharding through
+# deep scan bodies (observed on MoE prefill, see EXPERIMENTS.md SSPerf), so
+# the launcher pins the residual-stream batch axis explicitly — the same
+# discipline MaxText applies with logical axis rules.
+# ----------------------------------------------------------------------------
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_SEQ_PARALLEL: bool = False
+
+
+def enable_activation_constraints(batch_axes: Optional[Tuple[str, ...]],
+                                  seq_parallel: bool = False):
+    global _BATCH_AXES, _SEQ_PARALLEL
+    _BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _SEQ_PARALLEL = seq_parallel
+
+
+def constrain_batch(x, batch_axis: int = 0):
+    """Pin x's batch axis to the data axes (no-op when disabled or when the
+    batch does not divide). With seq_parallel, additionally shard the
+    sequence axis of the residual stream over `model` — GSPMD then emits
+    all-gather before each mixer and reduce-scatter after it (Megatron-SP),
+    halving the per-layer activation collective bytes vs all-reduce."""
+    if _BATCH_AXES is None:
+        return x
+    size = 1
+    for a in _BATCH_AXES:
+        size *= _FSDP_SIZE.get(a, 1)
+    if size <= 1 or x.shape[batch_axis] % size:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_axis] = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    if _SEQ_PARALLEL and x.ndim >= 3:
+        seq_ax = batch_axis + 1
+        m = _FSDP_SIZE.get("model", 1)
+        if m > 1 and x.shape[seq_ax] % m == 0 and x.shape[seq_ax] >= m:
+            spec[seq_ax] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))

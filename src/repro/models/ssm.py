@@ -1,0 +1,192 @@
+"""Recurrent mixers: Mamba-1 selective SSM (falcon-mamba) and RG-LRU
+(recurrentgemma), each with full-sequence and single-step decode paths.
+
+TPU adaptation note (DESIGN.md §2): the CUDA Mamba kernel fuses a chunked
+parallel scan in shared memory. Our full-sequence path uses ``lax.scan``
+over time with an O(B·d_inner·d_state) carry — HLO-compact (one body) and
+memory-light; the chunked-associative-scan variant is the §Perf knob for
+SSM archs. Decode is the natural O(1)-state update, which is exactly why
+SSMs are the ideal long_500k serving architecture.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import init_linear, linear
+
+
+# ----------------------------------------------------------------------------
+# Mamba-1 (arXiv:2312.00752; falcon-mamba arXiv:2410.05355)
+# ----------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    st, dc, dtr = cfg.ssm_state, cfg.ssm_conv, cfg.ssm_dt_rank
+    ks = jax.random.split(key, 7)
+    sc = lambda i, o: (2.0 / (i + o)) ** 0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * sc(d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * st),
+                                    dtype) * sc(di, dtr + 2 * st),
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * sc(dtr, di),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32),
+                                  (di, 1))),                    # [di, st]
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * sc(di, d),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [B, dc-1, di] rolling conv inputs
+    ssm: jnp.ndarray    # [B, di, st]
+
+    @classmethod
+    def zeros(cls, b, cfg: ArchConfig, dtype):
+        return cls(jnp.zeros((b, cfg.ssm_conv - 1, cfg.ssm_d_inner), dtype),
+                   jnp.zeros((b, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32))
+
+
+def _mamba_inner(params, xc: jnp.ndarray, z: jnp.ndarray, cfg: ArchConfig,
+                 h0: jnp.ndarray):
+    """xc: post-conv activations [B,S,di]; returns (y [B,S,di], h_last)."""
+    st, dtr = cfg.ssm_state, cfg.ssm_dt_rank
+    xdbc = xc @ params["x_proj"].astype(xc.dtype)                     # [B,S,dtr+2st]
+    dt = (xdbc[..., :dtr] @ params["dt_proj"].astype(xdbc.dtype)
+          + params["dt_bias"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32))     # [B,S,di]
+    bmat = xdbc[..., dtr:dtr + st].astype(jnp.float32)   # [B,S,st]
+    cmat = xdbc[..., dtr + st:].astype(jnp.float32)      # [B,S,st]
+    a = -jnp.exp(params["a_log"])                    # [di, st]
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp                    # [B,di],[B,st],[B,st],[B,di]
+        da = jnp.exp(dt_t[..., None] * a)            # [B,di,st]
+        db = dt_t[..., None] * b_t[:, None, :]       # [B,di,st]
+        h = da * h + db * x_t[..., None].astype(jnp.float32)
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2),
+          xc.transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)                        # [B,S,di]
+    y = y + xc.astype(jnp.float32) * params["d_skip"]
+    return (y.astype(xc.dtype) * jax.nn.silu(z)), h_last
+
+
+def mamba_forward(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    di, dc = cfg.ssm_d_inner, cfg.ssm_conv
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    # Causal depthwise conv over time.
+    xp = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + s] * params["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    y, _ = _mamba_inner(params, xc, z, cfg, h0)
+    return y @ params["out_proj"].astype(y.dtype)
+
+
+def mamba_decode(params, x: jnp.ndarray, state: MambaState,
+                 cfg: ArchConfig) -> Tuple[jnp.ndarray, MambaState]:
+    """x: [B,1,D] one token; constant-size state update."""
+    dc = cfg.ssm_conv
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)               # [B,1,di]
+    hist = jnp.concatenate([state.conv, xin], axis=1)   # [B,dc,di]
+    xc = sum(hist[:, i] * params["conv_w"][i] for i in range(dc))[:, None]
+    xc = jax.nn.silu(xc + params["conv_b"])
+    y, h_last = _mamba_inner(params, xc, z, cfg, state.ssm)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, MambaState(conv=hist[:, 1:], ssm=h_last)
+
+
+# ----------------------------------------------------------------------------
+# RG-LRU (recurrentgemma, arXiv:2402.19427 §2.4)
+# ----------------------------------------------------------------------------
+
+_LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    d, w, dc = cfg.d_model, cfg.rglru_width, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    sc = lambda i, o: (2.0 / (i + o)) ** 0.5
+    return {
+        "in_x": jax.random.normal(ks[0], (d, w), dtype) * sc(d, w),
+        "in_gate": jax.random.normal(ks[1], (d, w), dtype) * sc(d, w),
+        "conv_w": jax.random.normal(ks[2], (dc, w), dtype) * 0.2,
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_input_gate": jax.random.normal(ks[3], (w,), jnp.float32) * 0.5,
+        "w_rec_gate": jax.random.normal(ks[4], (w,), jnp.float32) * 0.5,
+        "lambda_p": jnp.full((w,), 2.0, jnp.float32),  # a = sigmoid(lambda)
+        "out": jax.random.normal(ks[5], (w, d), dtype) * sc(w, d),
+    }
+
+
+class RGLRUState(NamedTuple):
+    conv: jnp.ndarray   # [B, dc-1, w]
+    h: jnp.ndarray      # [B, w] float32
+
+    @classmethod
+    def zeros(cls, b, cfg: ArchConfig, dtype):
+        return cls(jnp.zeros((b, cfg.ssm_conv - 1, cfg.rglru_width), dtype),
+                   jnp.zeros((b, cfg.rglru_width), jnp.float32))
+
+
+def _rglru_scan(params, xc: jnp.ndarray, h0: jnp.ndarray):
+    """xc: [B,S,w] conv output; diagonal gated linear recurrence."""
+    xf = xc.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(xf * params["w_input_gate"])
+    r_gate = jax.nn.sigmoid(xf * params["w_rec_gate"])
+    log_a = -_LRU_C * jax.nn.softplus(params["lambda_p"]) * r_gate  # [B,S,w]
+    a = jnp.exp(log_a)
+    gated_x = i_gate * xf
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(h, inp):
+        a_t, gx_t, m_t = inp
+        h = a_t * h + m_t * gx_t
+        return h, h
+
+    xs = (a.transpose(1, 0, 2), gated_x.transpose(1, 0, 2),
+          mult.transpose(1, 0, 2))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return hs.transpose(1, 0, 2), h_last             # [B,S,w], [B,w]
+
+
+def rglru_forward(params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    dc = cfg.ssm_conv
+    xb = x @ params["in_x"].astype(x.dtype)
+    gate = x @ params["in_gate"].astype(x.dtype)
+    xp = jnp.pad(xb, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + s] * params["conv_w"][i] for i in range(dc))
+    xc = xc + params["conv_b"]
+    h0 = jnp.zeros((b, cfg.rglru_width), jnp.float32)
+    hs, _ = _rglru_scan(params, xc, h0)
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    return y @ params["out"].astype(y.dtype)
+
+
+def rglru_decode(params, x: jnp.ndarray, state: RGLRUState,
+                 cfg: ArchConfig) -> Tuple[jnp.ndarray, RGLRUState]:
+    dc = cfg.ssm_conv
+    xb = x @ params["in_x"].astype(x.dtype)          # [B,1,w]
+    gate = x @ params["in_gate"].astype(x.dtype)
+    hist = jnp.concatenate([state.conv, xb], axis=1)
+    xc = (sum(hist[:, i] * params["conv_w"][i] for i in range(dc))
+          + params["conv_b"])[:, None]
+    hs, h_last = _rglru_scan(params, xc, state.h)
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    return (y @ params["out"].astype(y.dtype),
+            RGLRUState(conv=hist[:, 1:], h=h_last))

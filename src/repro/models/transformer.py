@@ -1,0 +1,491 @@
+"""Composable decoder transformer covering all assigned architectures.
+
+Key structural decisions (see DESIGN.md §4):
+  * layers grouped into (group, repeats) *stages*; repeats run under
+    ``lax.scan`` with stacked params -> HLO size and compile time are
+    depth-independent (deepseek-67b's 95 layers compile as one body);
+  * three entry points sharing parameters:
+      - ``forward``      full-sequence logits (training / evaluation)
+      - ``prefill``      full-sequence + returns decode caches
+      - ``decode_step``  one token against caches (serve_step)
+  * attention is query-chunked (blockwise causal) so 32k-prefill and
+    4k-train never materialize an S x S score matrix;
+  * MoE aux losses ride the scan carry; MTP (deepseek-v3) is an optional
+    extra predict head over shifted positions.
+
+VLM / audio frontends are stubs per the harness carve-out: ``forward``
+accepts either int token ids or precomputed [B, S, D] embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ArchConfig, LayerSpec
+from repro.models.sharding import constrain_batch
+from repro.models.layers import (dtype_of, embed, init_embed, init_linear,
+                                 init_mlp, init_rms, linear, mlp, rms_norm,
+                                 sinusoidal_embedding, unembed)
+
+
+# ----------------------------------------------------------------------------
+# Parameter construction
+# ----------------------------------------------------------------------------
+
+def _init_mixer(key, spec: LayerSpec, cfg: ArchConfig, dtype):
+    if spec.mixer in ("gqa", "local_attn"):
+        return attn.init_gqa(key, cfg, dtype)
+    if spec.mixer == "mla":
+        return attn.init_mla(key, cfg, dtype)
+    if spec.mixer == "mamba":
+        return ssm_lib.init_mamba(key, cfg, dtype)
+    if spec.mixer == "rglru":
+        return ssm_lib.init_rglru(key, cfg, dtype)
+    raise ValueError(spec.mixer)
+
+
+def _init_block(key, spec: LayerSpec, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"norm1": init_rms(cfg.d_model, dtype),
+         "mixer": _init_mixer(ks[0], spec, cfg, dtype)}
+    if spec.ffn == "mlp":
+        p["norm2"] = init_rms(cfg.d_model, dtype)
+        p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                            gated=cfg.mlp_gated)
+    elif spec.ffn == "moe":
+        p["norm2"] = init_rms(cfg.d_model, dtype)
+        p["ffn"] = moe_lib.init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, len(cfg.stages()) + 3)
+    params: Dict[str, Any] = {}
+    params["embed"] = init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    stages = []
+    for si, (group, repeats) in enumerate(cfg.stages()):
+        gkeys = jax.random.split(keys[si + 1], repeats)
+
+        def init_one(k, _group=group):
+            sks = jax.random.split(k, len(_group))
+            return tuple(_init_block(sk, spec, cfg, dtype)
+                         for sk, spec in zip(sks, _group))
+
+        stages.append(jax.vmap(init_one)(gkeys))
+    params["stages"] = stages
+    params["final_norm"] = init_rms(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(keys[-1], cfg.d_model, cfg.vocab_size,
+                                     dtype)
+    if cfg.mtp_depth:
+        mk = jax.random.split(keys[-2], 3)
+        params["mtp"] = {
+            "proj": init_linear(mk[0], 2 * cfg.d_model, cfg.d_model, dtype),
+            "block": _init_block(mk[1], LayerSpec(
+                "mla" if cfg.use_mla else "gqa", "mlp"), cfg, dtype),
+            "norm": init_rms(cfg.d_model, dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ArchConfig, key=None):
+    """ShapeDtypeStruct pytree (no allocation) for dry-run lowering."""
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda: init_params(cfg, k))
+
+
+# ----------------------------------------------------------------------------
+# Block application (shared by all modes)
+# ----------------------------------------------------------------------------
+
+def _mixer_forward(p, spec: LayerSpec, x, cfg: ArchConfig, window: int):
+    if spec.mixer == "gqa":
+        return attn.gqa_forward(p, x, cfg, window=window)
+    if spec.mixer == "local_attn":
+        return attn.gqa_forward(p, x, cfg, window=cfg.local_window)
+    if spec.mixer == "mla":
+        return attn.mla_forward(p, x, cfg, window=window)
+    if spec.mixer == "mamba":
+        return ssm_lib.mamba_forward(p, x, cfg)
+    if spec.mixer == "rglru":
+        return ssm_lib.rglru_forward(p, x, cfg)
+    raise ValueError(spec.mixer)
+
+
+def _apply_block(p, spec: LayerSpec, x, cfg: ArchConfig, window: int,
+                 capacity_factor=None):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    x = x + _mixer_forward(p["mixer"], spec, h, cfg, window).astype(x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn is not None:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            kw = {} if capacity_factor is None else {
+                "capacity_factor": capacity_factor}
+            y, aux = moe_lib.moe_ffn(p["ffn"], h, cfg, **kw)
+        else:
+            act = "gelu" if "w_gate" not in p["ffn"] else "silu"
+            y = mlp(p["ffn"], h, activation=act)
+        x = x + y.astype(x.dtype)
+    return x, aux
+
+
+def _run_stages(params, cfg: ArchConfig, x, window: int,
+                remat: bool = False, capacity_factor=None):
+    """Apply every stage via lax.scan; returns (x, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    for (group, repeats), stage_p in zip(cfg.stages(), params["stages"]):
+
+        def body(carry, block_ps, _group=group):
+            h, aux = carry
+            h = constrain_batch(h)
+            for bp, spec in zip(block_ps, _group):
+                h, a = _apply_block(bp, spec, h, cfg, window,
+                                    capacity_factor=capacity_factor)
+                aux = aux + a
+            return (constrain_batch(h), aux), None
+
+        if remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), stage_p)
+    return x, total_aux
+
+
+def _embed_inputs(params, cfg: ArchConfig, inputs):
+    dtype = dtype_of(cfg.activation_dtype)
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = embed(params["embed"], inputs).astype(dtype)
+    else:
+        x = inputs.astype(dtype)
+    if cfg.pos_embedding == "sinusoidal":
+        s = x.shape[1]
+        pos = sinusoidal_embedding(jnp.arange(s), cfg.d_model)
+        x = x + pos[None].astype(dtype)
+    return constrain_batch(x)
+
+
+def _logits(params, cfg: ArchConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x)
+    return linear(params["head"], x)
+
+
+def forward(params, cfg: ArchConfig, inputs, *, window: int = 0,
+            remat: bool = False, capacity_factor=None):
+    """inputs: int tokens [B,S] or embeddings [B,S,D] -> (logits, aux)."""
+    x = _embed_inputs(params, cfg, inputs)
+    x, aux = _run_stages(params, cfg, x, window, remat=remat,
+                         capacity_factor=capacity_factor)
+    return _logits(params, cfg, x), aux
+
+
+# ----------------------------------------------------------------------------
+# Loss / train step
+# ----------------------------------------------------------------------------
+
+def _ce_loss(logits, targets):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    # Single trunk pass shared by the main head and the MTP head (the MTP
+    # module re-uses the final hidden states — recomputing the trunk for
+    # MTP would double train compute; see EXPERIMENTS.md SSPerf extras).
+    x = _embed_inputs(params, cfg, batch["inputs"])
+    x, aux = _run_stages(params, cfg, x, window=0, remat=remat)
+    logits = _logits(params, cfg, x)
+    loss = _ce_loss(logits, batch["targets"])
+    if cfg.num_experts:
+        loss = loss + 0.01 * aux
+    if cfg.mtp_depth and "mtp" in params:
+        loss = loss + 0.3 * _mtp_loss(params, cfg, batch, x)
+    return loss
+
+
+def _mtp_loss(params, cfg: ArchConfig, batch, trunk_x):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from the
+    trunk state at t combined with the embedding of token t+1."""
+    inputs, targets = batch["inputs"], batch["targets"]
+    if inputs.dtype not in (jnp.int32, jnp.int64):
+        return jnp.zeros((), jnp.float32)
+    # Combine trunk state h_t with emb(x_{t+1}); predict target_{t+1} (=x_{t+2}).
+    h_t = trunk_x[:, :-1]
+    e_next = _embed_inputs(params, cfg, inputs[:, 1:])
+    z = jnp.concatenate([rms_norm(h_t, params["mtp"]["norm"], cfg.norm_eps),
+                         e_next], axis=-1)
+    z = linear(params["mtp"]["proj"], z)
+    spec = LayerSpec("mla" if cfg.use_mla else "gqa", "mlp")
+    z, _ = _apply_block(params["mtp"]["block"], spec, z, cfg, 0)
+    logits = _logits(params, cfg, z)
+    return _ce_loss(logits, targets[:, 1:])
+
+
+def make_train_step(cfg: ArchConfig, optimizer, *, microbatches: int = 1,
+                    remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Gradient accumulation over ``microbatches`` splits of the
+    global batch (sequential lax.scan -> peak activation memory divides)."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch,
+                                                      remat=remat)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc(carry, mbatch):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, cfg, mbatch,
+                                                   remat=remat)
+                grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, g)
+                return (loss_acc + l, grad_acc), None
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zero_grads),
+                                            mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        params, opt_state = optimizer.apply(params, grads, opt_state)
+        metrics = {"loss": loss,
+                   "grad_norm": jax.tree_util.tree_reduce(
+                       lambda a, g: a + jnp.sum(
+                           jnp.square(g.astype(jnp.float32))),
+                       grads, jnp.zeros(())) ** 0.5}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------------------
+# Serving: prefill + decode
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               window: int = 0, quantized: bool = False) -> List[Any]:
+    """Decode caches mirroring the stage structure (stacked over repeats).
+
+    ``quantized=True`` builds int8 QuantKVCache for attention layers — the
+    DAQ-inspired serving variant (SSPerf)."""
+    dtype = dtype_of(cfg.activation_dtype)
+    kv_cls = attn.QuantKVCache if quantized else attn.KVCache
+    caches = []
+    for group, repeats in cfg.stages():
+        def one(_, _group=group):
+            out = []
+            for spec in _group:
+                if spec.mixer in ("gqa",):
+                    t = min(window, cache_len) if window else cache_len
+                    out.append(kv_cls.zeros(
+                        batch, t, cfg.num_kv_heads, cfg.head_dim, dtype))
+                elif spec.mixer == "local_attn":
+                    t = min(cfg.local_window, cache_len)
+                    out.append(kv_cls.zeros(
+                        batch, t, cfg.num_kv_heads, cfg.head_dim, dtype))
+                elif spec.mixer == "mla":
+                    t = min(window, cache_len) if window else cache_len
+                    out.append(attn.MLACache.zeros(
+                        batch, t, cfg.kv_lora_rank, cfg.qk_rope_head_dim,
+                        dtype))
+                elif spec.mixer == "mamba":
+                    out.append(ssm_lib.MambaState.zeros(batch, cfg, dtype))
+                elif spec.mixer == "rglru":
+                    out.append(ssm_lib.RGLRUState.zeros(batch, cfg, dtype))
+            return tuple(out)
+
+        caches.append(jax.vmap(one)(jnp.arange(repeats)))
+    return caches
+
+
+def _decode_block(p, spec: LayerSpec, x, cache, pos, cfg: ArchConfig,
+                  window: int):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == "gqa":
+        y, cache = attn.gqa_decode(p["mixer"], h, cache, pos, cfg,
+                                   window=window)
+    elif spec.mixer == "local_attn":
+        y, cache = attn.gqa_decode(p["mixer"], h, cache, pos, cfg,
+                                   window=cfg.local_window)
+    elif spec.mixer == "mla":
+        y, cache = attn.mla_decode(p["mixer"], h, cache, pos, cfg,
+                                   window=window)
+    elif spec.mixer == "mamba":
+        y, cache = ssm_lib.mamba_decode(p["mixer"], h, cache, cfg)
+    elif spec.mixer == "rglru":
+        y, cache = ssm_lib.rglru_decode(p["mixer"], h, cache, cfg)
+    x = x + y.astype(x.dtype)
+    if spec.ffn is not None:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            # Dropless at decode: single-token batches must never drop.
+            cf = cfg.num_experts / max(cfg.experts_per_token, 1)
+            y, _ = moe_lib.moe_ffn(p["ffn"], h, cfg, capacity_factor=cf)
+        else:
+            act = "gelu" if "w_gate" not in p["ffn"] else "silu"
+            y = mlp(p["ffn"], h, activation=act)
+        x = x + y.astype(x.dtype)
+    return x, cache
+
+
+def decode_step(params, cfg: ArchConfig, caches, tokens, pos, *,
+                window: int = 0):
+    """One serving step: tokens [B,1] int (or [B,1,D] embeddings), absolute
+    position ``pos`` -> (logits [B,1,V], new caches)."""
+    dtype = dtype_of(cfg.activation_dtype)
+    if tokens.dtype in (jnp.int32, jnp.int64):
+        x = embed(params["embed"], tokens).astype(dtype)
+    else:
+        x = tokens.astype(dtype)
+    if cfg.pos_embedding == "sinusoidal":
+        pos_vec = jnp.reshape(pos, (1,))
+        x = x + sinusoidal_embedding(pos_vec, cfg.d_model)[None].astype(dtype)
+    new_caches = []
+    for (group, repeats), stage_p, stage_c in zip(cfg.stages(),
+                                                  params["stages"], caches):
+
+        def body(h, xs, _group=group):
+            block_ps, block_cs = xs
+            new_cs = []
+            for bp, bc, spec in zip(block_ps, block_cs, _group):
+                h, nc = _decode_block(bp, spec, h, bc, pos, cfg, window)
+                new_cs.append(nc)
+            return h, tuple(new_cs)
+
+        x, nc = jax.lax.scan(body, x, (stage_p, stage_c))
+        new_caches.append(nc)
+    return _logits(params, cfg, x), new_caches
+
+
+def prefill(params, cfg: ArchConfig, inputs, *, window: int = 0,
+            cache_len: int = 0):
+    """Full-sequence prefill: returns (last-token logits, caches filled for
+    positions [0, S)). ``cache_len`` > S pre-allocates decode headroom."""
+    s = inputs.shape[1]
+    cache_len = max(cache_len, s)
+    x = _embed_inputs(params, cfg, inputs)
+    caches = []
+    for (group, repeats), stage_p in zip(cfg.stages(), params["stages"]):
+
+        def body(h, block_ps, _group=group):
+            new_cs = []
+            h = constrain_batch(h)
+            for bp, spec in zip(block_ps, _group):
+                hn = rms_norm(h, bp["norm1"], cfg.norm_eps)
+                if spec.mixer in ("gqa", "local_attn", "mla"):
+                    y = _mixer_forward(bp["mixer"], spec, hn, cfg, window)
+                    new_cs.append(_prefill_cache(bp["mixer"], spec, hn, cfg,
+                                                 window, cache_len))
+                else:
+                    y = _mixer_forward(bp["mixer"], spec, hn, cfg, window)
+                    new_cs.append(_prefill_state(bp["mixer"], spec, hn, cfg))
+                h = h + y.astype(h.dtype)
+                if spec.ffn is not None:
+                    h2 = rms_norm(h, bp["norm2"], cfg.norm_eps)
+                    if spec.ffn == "moe":
+                        y2, _ = moe_lib.moe_ffn(bp["ffn"], h2, cfg)
+                    else:
+                        act = "gelu" if "w_gate" not in bp["ffn"] else "silu"
+                        y2 = mlp(bp["ffn"], h2, activation=act)
+                    h = h + y2.astype(h.dtype)
+            return h, tuple(new_cs)
+
+        x, cs = jax.lax.scan(body, x, stage_p)
+        caches.append(cs)
+    return _logits(params, cfg, x[:, -1:]), caches
+
+
+def _pad_time(x, t: int):
+    """Zero-pad axis 1 (time) up to t entries."""
+    if x.shape[1] >= t:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, t - x.shape[1])
+    return jnp.pad(x, pad)
+
+
+def _prefill_cache(p, spec, h, cfg: ArchConfig, window: int, cache_len: int):
+    """Recompute K/V (cheap projections) to fill the decode cache."""
+    s = h.shape[1]
+    cdt = dtype_of(cfg.activation_dtype)
+    positions = jnp.arange(s)[None, :]
+    if spec.mixer == "mla":
+        r_kv = cfg.kv_lora_rank
+        ckv = jnp.einsum("bsd,dr->bsr", h, p["wkv_a"])
+        c_kv, k_rope = ckv[..., :r_kv], ckv[..., r_kv:]
+        k_rope = attn.apply_rope(k_rope[:, :, None, :], positions,
+                                 cfg.rope_theta)[:, :, 0]
+        if window:
+            w = min(window, cache_len)
+            return attn.MLACache(_ring_pack(c_kv, w).astype(cdt),
+                                 _ring_pack(k_rope, w).astype(cdt))
+        return attn.MLACache(_pad_time(c_kv, cache_len).astype(cdt),
+                             _pad_time(k_rope, cache_len).astype(cdt))
+    q, k, v = attn._qkv(p, h, cfg, positions)
+    k, v = k.astype(cdt), v.astype(cdt)
+    w = 0
+    if spec.mixer == "local_attn":
+        w = min(cfg.local_window, cache_len)
+    elif window:
+        w = min(window, cache_len)
+    if w:
+        return attn.KVCache(_ring_pack(k, w), _ring_pack(v, w))
+    return attn.KVCache(_pad_time(k, cache_len), _pad_time(v, cache_len))
+
+
+def _ring_pack(x, w: int):
+    """Place the last w timesteps at their ring-buffer slots (pos % w) so a
+    subsequent windowed decode continues seamlessly."""
+    s = x.shape[1]
+    if s <= w:
+        return _pad_time(x, w)
+    tail = x[:, s - w:]
+    shift = (s - w) % w
+    return jnp.roll(tail, shift, axis=1)
+
+
+def _prefill_state(p, spec, h, cfg: ArchConfig):
+    """Final recurrent state after a full-sequence pass (recomputes the
+    scan; XLA CSEs against the forward pass)."""
+    b, s, _ = h.shape
+    if spec.mixer == "mamba":
+        dc = cfg.ssm_conv
+        xz = h @ p["in_proj"]
+        xin, z = jnp.split(xz, 2, axis=-1)
+        xp = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+        xc = sum(xp[:, i:i + s] * p["conv_w"][i] for i in range(dc))
+        xc = jax.nn.silu(xc + p["conv_b"])
+        h0 = jnp.zeros((b, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32)
+        _, h_last = ssm_lib._mamba_inner(p, xc, z, cfg, h0)
+        cdt = dtype_of(cfg.activation_dtype)
+        return ssm_lib.MambaState(conv=xin[:, -(dc - 1):].astype(cdt),
+                                  ssm=h_last)
+    if spec.mixer == "rglru":
+        dc = cfg.ssm_conv
+        xb = h @ p["in_x"]
+        xp = jnp.pad(xb, ((0, 0), (dc - 1, 0), (0, 0)))
+        xc = sum(xp[:, i:i + s] * p["conv_w"][i] for i in range(dc))
+        xc = xc + p["conv_b"]
+        h0 = jnp.zeros((b, cfg.rglru_width), jnp.float32)
+        _, h_last = ssm_lib._rglru_scan(p, xc, h0)
+        cdt = dtype_of(cfg.activation_dtype)
+        return ssm_lib.RGLRUState(conv=xb[:, -(dc - 1):].astype(cdt),
+                                  h=h_last)
+    raise ValueError(spec.mixer)

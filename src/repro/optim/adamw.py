@@ -1,0 +1,83 @@
+"""AdamW with decoupled weight decay + warmup-cosine schedule.
+
+Moments live in the *params' own sharding* (the path-based rules in
+models/sharding.py apply to the optimizer state pytree verbatim), so
+optimizer memory is fully sharded. Giants can keep moments in bf16 via
+``moment_dtype`` (HBM budget, see EXPERIMENTS.md §Dry-run notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Any = 3e-4          # float or schedule fn
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+    def _mdtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            self.moment_dtype]
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self._mdtype())
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree_util.tree_map(zeros, params),
+                          v=jax.tree_util.tree_map(zeros, params))
+
+    def apply(self, params, grads, state: AdamWState):
+        step = state.step + 1
+        lr = (self.learning_rate(step)
+              if callable(self.learning_rate) else self.learning_rate)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        mdt = self._mdtype()
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m32.astype(mdt), v32.astype(mdt)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)

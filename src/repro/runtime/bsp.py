@@ -1,0 +1,237 @@
+"""Distributed BSP GNN inference runtime (paper §III-E) on a JAX mesh.
+
+The paper's runtime: each fog holds a vertex partition; every GNN layer runs
+Aggregate/Update over local vertices, pulling neighbor activations from
+other fogs in a Bulk-Synchronous-Parallel step (K syncs for K layers).
+
+TPU/JAX adaptation: fogs = devices along a ``fog`` mesh axis, executed with
+``shard_map``. The per-layer cross-fog exchange supports two strategies:
+
+  * ``"allgather"``  — all_gather the full [P, F] partition activations
+    (straw-man exchange; O(n·P·F) bytes per device per layer).
+  * ``"halo"``       — all_gather only the *boundary rows* (vertices that any
+    other partition reads), packed into a [B, F] buffer (B = max boundary
+    size). This is the paper's "exchange vertices data when needed",
+    and the §Perf knob for the collective roofline term.
+
+Both produce identical results; tests assert equality against single-device
+execution. Per-partition buffers are padded to common static shapes so the
+whole computation jits once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.gnn.graph import Graph
+from repro.gnn.layers import EdgeList, LAYER_FNS
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """Static-shape per-partition buffers for shard_map execution."""
+    n: int                      # number of partitions (mesh size)
+    slots: int                  # P: padded vertices per partition
+    edges_per_part: int         # E: padded edges per partition
+    boundary_slots: int         # B: padded boundary rows per partition
+    feats: np.ndarray           # [n, P, F] local features (padded rows = 0)
+    vertex_mask: np.ndarray     # [n, P] 1 for real vertices
+    # Edge connectivity, partitioned by the *receiver*'s owner:
+    senders_global: np.ndarray  # [n, E] index into flattened [n*P] table
+    senders_halo: np.ndarray    # [n, E] index into flattened [n*B] boundary table
+    receivers_local: np.ndarray # [n, E] 0..P-1
+    edge_mask: np.ndarray       # [n, E]
+    # Boundary packing: rows each partition contributes to the halo table.
+    boundary_rows: np.ndarray   # [n, B] local slot ids (padded w/ 0)
+    boundary_mask: np.ndarray   # [n, B]
+    # Self-edges for GAT (senders point at own row in the gathered table).
+    self_senders_global: np.ndarray  # [n, P]
+    self_senders_halo: np.ndarray    # [n, P]
+    # Inverse permutation: result row for global vertex v lives at
+    # (part[v], slot[v]).
+    part_of: np.ndarray         # [V]
+    slot_of: np.ndarray         # [V]
+
+    def unpermute(self, out: np.ndarray) -> np.ndarray:
+        """[n, P, D] stacked partition outputs -> [V, D] original order."""
+        return out[self.part_of, self.slot_of]
+
+
+def build_partitioned(g: Graph, assignment: np.ndarray,
+                      pad_multiple: int = 8) -> PartitionedGraph:
+    """Lay the graph out per-partition with static padded shapes."""
+    assignment = np.asarray(assignment, np.int64)
+    n = int(assignment.max()) + 1
+    parts: List[np.ndarray] = [np.flatnonzero(assignment == p) for p in range(n)]
+    sizes = np.array([len(p) for p in parts])
+    slots = int(-(-sizes.max() // pad_multiple) * pad_multiple)
+
+    part_of = assignment
+    slot_of = np.zeros(g.num_vertices, np.int64)
+    for p, vs in enumerate(parts):
+        slot_of[vs] = np.arange(len(vs))
+
+    f = g.feature_dim
+    feats = np.zeros((n, slots, f), np.float32)
+    vmask = np.zeros((n, slots), np.float32)
+    for p, vs in enumerate(parts):
+        feats[p, :len(vs)] = g.features[vs]
+        vmask[p, :len(vs)] = 1.0
+
+    # Edges grouped by receiver's partition.
+    recv_part = part_of[g.receivers]
+    edge_lists = [np.flatnonzero(recv_part == p) for p in range(n)]
+    e_max = max(1, max(len(e) for e in edge_lists))
+    e_pad = int(-(-e_max // pad_multiple) * pad_multiple)
+
+    # Boundary rows: vertices read by any foreign partition.
+    boundary_ids = []
+    for p in range(n):
+        cross = (part_of[g.senders] == p) & (recv_part != p)
+        boundary_ids.append(np.unique(g.senders[cross]))
+    b_max = max(1, max(len(b) for b in boundary_ids))
+    b_pad = int(-(-b_max // pad_multiple) * pad_multiple)
+
+    # halo index of vertex v (valid only if v is in its owner's boundary set)
+    halo_slot = np.zeros(g.num_vertices, np.int64)
+    for p, bs in enumerate(boundary_ids):
+        halo_slot[bs] = np.arange(len(bs))
+
+    senders_global = np.zeros((n, e_pad), np.int32)
+    senders_halo = np.zeros((n, e_pad), np.int32)
+    receivers_local = np.zeros((n, e_pad), np.int32)
+    edge_mask = np.zeros((n, e_pad), np.float32)
+    boundary_rows = np.zeros((n, b_pad), np.int32)
+    boundary_mask = np.zeros((n, b_pad), np.float32)
+    for p in range(n):
+        eids = edge_lists[p]
+        s, r = g.senders[eids], g.receivers[eids]
+        k = len(eids)
+        senders_global[p, :k] = part_of[s] * slots + slot_of[s]
+        # local senders also appear in the halo table? no — local senders are
+        # read from the local shard directly in halo mode: point them at the
+        # *own* boundary copy when they are boundary rows, else we route local
+        # edges through the local table. To keep a single gather, halo mode
+        # uses a combined table [local P rows | n*B halo rows]; local senders
+        # use their local slot, remote senders use P + their halo position.
+        local = part_of[s] == p
+        senders_halo[p, :k] = np.where(
+            local, slot_of[s],
+            slots + part_of[s] * b_pad + halo_slot[s]).astype(np.int32)
+        receivers_local[p, :k] = slot_of[r]
+        edge_mask[p, :k] = 1.0
+        bs = boundary_ids[p]
+        boundary_rows[p, :len(bs)] = slot_of[bs]
+        boundary_mask[p, :len(bs)] = 1.0
+
+    self_g = np.zeros((n, slots), np.int32)
+    self_h = np.zeros((n, slots), np.int32)
+    for p in range(n):
+        self_g[p] = p * slots + np.arange(slots)
+        self_h[p] = np.arange(slots)  # local rows in combined halo table
+
+    return PartitionedGraph(
+        n=n, slots=slots, edges_per_part=e_pad, boundary_slots=b_pad,
+        feats=feats, vertex_mask=vmask,
+        senders_global=senders_global, senders_halo=senders_halo,
+        receivers_local=receivers_local, edge_mask=edge_mask,
+        boundary_rows=boundary_rows, boundary_mask=boundary_mask,
+        self_senders_global=self_g, self_senders_halo=self_h,
+        part_of=part_of, slot_of=slot_of)
+
+
+def _layer_edges(pg: PartitionedGraph, senders, kind: str, self_senders,
+                 receivers, emask, vmask):
+    """EdgeList for one partition; GAT gets explicit self-edges."""
+    if kind == "gat":
+        s = jnp.concatenate([senders, self_senders])
+        r = jnp.concatenate([receivers,
+                             jnp.arange(pg.slots, dtype=receivers.dtype)])
+        m = jnp.concatenate([emask, vmask])
+        return EdgeList(s, r, m, pg.slots)
+    return EdgeList(senders, receivers, emask, pg.slots)
+
+
+def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
+              axis: str = "fog", exchange: str = "halo") -> jnp.ndarray:
+    """Distributed K-layer GNN inference; returns [n, P, D] device outputs."""
+    _, layer_fn = LAYER_FNS[kind]
+    nlayers = len(params)
+
+    def shard_fn(feats, vmask, s_g, s_h, recv, emask, brows, bmask,
+                 self_g, self_h):
+        # shard_map blocks: feats [1, P, F] etc. — squeeze the leading axis.
+        h = feats[0]
+        vm, sg, sh = vmask[0], s_g[0], s_h[0]
+        rc, em = recv[0], emask[0]
+        br, bm = brows[0], bmask[0]
+        selg, selh = self_g[0], self_h[0]
+        for li, p in enumerate(params):
+            act_last = li == nlayers - 1
+            if exchange == "allgather":
+                h_all = jax.lax.all_gather(h, axis)          # [n, P, F]
+                h_src = h_all.reshape(-1, h.shape[-1])
+                edges = _layer_edges(pg, sg, kind, selg, rc, em, vm)
+            elif exchange == "halo":
+                hb = h[br] * bm[:, None]                      # [B, F]
+                halo = jax.lax.all_gather(hb, axis)           # [n, B, F]
+                h_src = jnp.concatenate(
+                    [h, halo.reshape(-1, h.shape[-1])], axis=0)
+                edges = _layer_edges(pg, sh, kind, selh, rc, em, vm)
+            else:
+                raise ValueError(exchange)
+            if act_last:
+                h = layer_fn(p, h, edges, activation=None, h_src=h_src)
+            else:
+                h = layer_fn(p, h, edges, h_src=h_src)
+            h = h * vm[:, None]  # keep padded rows at zero
+        return h[None]
+
+    spec = P(axis, None, None)
+    spec2 = P(axis, None)
+    fn = jax.jit(jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
+                  spec2, spec2),
+        out_specs=spec))
+    return fn(jnp.asarray(pg.feats), jnp.asarray(pg.vertex_mask),
+              jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
+              jnp.asarray(pg.receivers_local), jnp.asarray(pg.edge_mask),
+              jnp.asarray(pg.boundary_rows), jnp.asarray(pg.boundary_mask),
+              jnp.asarray(pg.self_senders_global),
+              jnp.asarray(pg.self_senders_halo))
+
+
+def bsp_infer(params, kind: str, g: Graph, assignment: np.ndarray,
+              mesh: Optional[Mesh] = None, exchange: str = "halo",
+              axis: str = "fog") -> np.ndarray:
+    """End-to-end distributed inference -> [V, D] in original vertex order.
+
+    With ``mesh=None`` a mesh over all available devices is built; the
+    number of partitions must equal the mesh size.
+    """
+    pg = build_partitioned(g, assignment)
+    if mesh is None:
+        devs = np.array(jax.devices()[:pg.n])
+        if len(devs) != pg.n:
+            raise ValueError(
+                f"need {pg.n} devices for {pg.n} partitions, have "
+                f"{len(jax.devices())} — run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={pg.n}")
+        mesh = Mesh(devs, (axis,))
+    out = np.asarray(bsp_apply(params, kind, pg, mesh, axis, exchange))
+    return pg.unpermute(out)
+
+
+def exchange_bytes(pg: PartitionedGraph, feature_dim: int,
+                   exchange: str, dtype_bytes: int = 4) -> int:
+    """Collective payload per BSP sync (for the communication roofline)."""
+    if exchange == "allgather":
+        return pg.n * pg.slots * feature_dim * dtype_bytes
+    return pg.n * pg.boundary_slots * feature_dim * dtype_bytes

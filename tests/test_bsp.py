@@ -1,0 +1,73 @@
+"""Distributed BSP runtime == single-device inference (multi-device via
+subprocess so the 8-device XLA flag never leaks into other tests)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import partition
+from repro.gnn import datasets
+from repro.runtime import bsp
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_build_partitioned_invariants():
+    g = datasets.load("yelp", scale=0.05, seed=0)
+    a = partition.bgp(g, 4, seed=0)
+    pg = bsp.build_partitioned(g, a)
+    assert pg.n == 4
+    assert pg.feats.shape[0] == 4
+    # every vertex appears exactly once at (part, slot)
+    seen = set()
+    for v in range(g.num_vertices):
+        key = (int(pg.part_of[v]), int(pg.slot_of[v]))
+        assert key not in seen
+        seen.add(key)
+    # all real edges preserved
+    assert int(pg.edge_mask.sum()) == g.num_edges
+    # halo: boundary rows cover all cross-partition senders
+    for p in range(4):
+        cross = (pg.part_of[g.senders] == p) & (pg.part_of[g.receivers] != p)
+        assert pg.boundary_mask[p].sum() == len(np.unique(g.senders[cross]))
+
+
+def test_exchange_bytes_halo_less_than_allgather():
+    g = datasets.load("siot", scale=0.05, seed=1)
+    a = partition.bgp(g, 4, seed=0)
+    pg = bsp.build_partitioned(g, a)
+    assert bsp.exchange_bytes(pg, 52, "halo") <= \
+        bsp.exchange_bytes(pg, 52, "allgather")
+
+
+@pytest.mark.parametrize("kind", ["gcn", "gat", "sage"])
+def test_bsp_equals_single_device_subprocess(kind):
+    """Run the 4-device check in a subprocess with forced host devices."""
+    code = textwrap.dedent(f"""
+        import numpy as np, jax
+        from repro.gnn import datasets, models
+        from repro.gnn.layers import EdgeList
+        from repro.core import partition
+        from repro.runtime import bsp
+        g = datasets.load('yelp', scale=0.06, seed=3)
+        assign = partition.bgp(g, 4, seed=0)
+        params = models.gnn_init(jax.random.PRNGKey(0), '{kind}',
+                                 [g.feature_dim, 32, 8])
+        ref = np.asarray(models.gnn_apply(params, '{kind}', g.features,
+                                          EdgeList.from_graph(g)))
+        for ex in ['allgather', 'halo']:
+            out = bsp.bsp_infer(params, '{kind}', g, assign, exchange=ex)
+            err = float(np.abs(out - ref).max())
+            assert err < 5e-4, (ex, err)
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout

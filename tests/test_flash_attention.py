@@ -1,0 +1,93 @@
+"""Flash attention Pallas kernel vs plain-softmax oracle (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention, gqa_flash
+from repro.models.attention import chunked_causal_attention
+
+
+@pytest.mark.parametrize("bh,s,t,dh", [(4, 256, 256, 64), (2, 128, 128, 128),
+                                       (1, 512, 512, 32), (3, 128, 384, 64)])
+def test_flash_matches_ref(bh, s, t, dh):
+    rng = np.random.default_rng(hash((bh, s, t, dh)) % 2 ** 31)
+    q = jnp.asarray(rng.normal(size=(bh, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, t, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, t, dh)), jnp.float32)
+    qoff = t - s  # suffix queries (chunked prefill layout)
+    out = flash_attention(q, k, v, bq=64, bk=64, q_offset=qoff)
+    want = ref.flash_attention_ref(q, k, v, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_windowed(window):
+    rng = np.random.default_rng(window)
+    q = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    out = flash_attention(q, k, v, bq=64, bk=64, window=window)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [(32, 64), (64, 32), (128, 128)])
+def test_flash_block_shape_sweep(block):
+    bq, bk = block
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    out = flash_attention(q, k, v, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.bfloat16)
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_gqa_flash_matches_model_attention():
+    """Kernel == the model's chunked_causal_attention (GQA, kv groups)."""
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(2, 128, 8, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    o1 = gqa_flash(q, k, v, bq=64, bk=64)
+    o2 = chunked_causal_attention(q, k, v, 4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_model_level_flash_option():
+    """ArchConfig(attn_impl='flash') routes gqa_forward through the Pallas
+    kernel and matches the chunked XLA path end-to-end."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import registry
+    from repro.models import transformer as tf
+
+    cfg = registry.reduced(registry.get("granite-3-2b"))
+    cfgf = dataclasses.replace(cfg, attn_impl="flash")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 128)), jnp.int32)
+    l1, _ = tf.forward(params, cfg, toks)
+    l2, _ = tf.forward(params, cfgf, toks)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=1e-4, atol=1e-4)

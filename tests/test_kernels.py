@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.gnn import datasets
+from repro.kernels import ops, ref
+from repro.kernels.daq_dequant import dequant, dequant_spmm
+from repro.kernels.gather_aggregate import block_spmm, build_block_csr
+
+
+def _random_graph(n, e, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, n, e).astype(np.int32)
+    r = rng.integers(0, n, e).astype(np.int32)
+    return s, r
+
+
+@pytest.mark.parametrize("n,e,f", [(64, 256, 128), (200, 1000, 128),
+                                   (300, 4000, 256), (128, 128, 384)])
+def test_block_spmm_matches_ref_and_edge_sum(n, e, f):
+    s, r = _random_graph(n, e, 0)
+    blocks, cols, mask, pv = build_block_csr(s, r, n)
+    rng = np.random.default_rng(1)
+    h = np.zeros((pv, f), np.float32)
+    h[:n] = rng.normal(size=(n, f)).astype(np.float32)
+    out = np.asarray(block_spmm(jnp.asarray(blocks), jnp.asarray(cols),
+                                jnp.asarray(mask), jnp.asarray(h)))
+    want = np.asarray(ref.block_spmm_ref(jnp.asarray(blocks),
+                                         jnp.asarray(cols),
+                                         jnp.asarray(mask), jnp.asarray(h)))
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+    # ground truth via edge accumulation (duplicate edges accumulate)
+    agg = np.zeros_like(h)
+    np.add.at(agg, r, h[s])
+    np.testing.assert_allclose(out[:n], agg[:n], rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("f_tile", [128, 256])
+def test_block_spmm_f_tiles(f_tile):
+    s, r = _random_graph(100, 500, 2)
+    blocks, cols, mask, pv = build_block_csr(s, r, 100)
+    h = np.random.default_rng(3).normal(size=(pv, 256)).astype(np.float32)
+    out = np.asarray(block_spmm(jnp.asarray(blocks), jnp.asarray(cols),
+                                jnp.asarray(mask), jnp.asarray(h),
+                                f_tile=f_tile))
+    want = np.asarray(ref.block_spmm_ref(jnp.asarray(blocks),
+                                         jnp.asarray(cols),
+                                         jnp.asarray(mask), jnp.asarray(h)))
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.uint32])
+@pytest.mark.parametrize("v,f", [(256, 128), (512, 256)])
+def test_dequant_kernel_dtypes(dtype, v, f):
+    rng = np.random.default_rng(4)
+    info = np.iinfo(dtype)
+    codes = rng.integers(0, min(info.max, 1 << 20), (v, f)).astype(dtype)
+    sc = rng.uniform(1e-3, 1.0, v).astype(np.float32)
+    mn = rng.normal(size=v).astype(np.float32)
+    out = np.asarray(dequant(jnp.asarray(codes), jnp.asarray(sc),
+                             jnp.asarray(mn)))
+    want = np.asarray(ref.dequant_ref(jnp.asarray(codes), jnp.asarray(sc),
+                                      jnp.asarray(mn)))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-5)
+
+
+def test_fused_dequant_spmm_matches_unfused():
+    g = datasets.load("yelp", scale=0.05, seed=5)
+    rng = np.random.default_rng(6)
+    codes = rng.integers(0, 255, (g.num_vertices, 64)).astype(np.uint8)
+    sc = rng.uniform(0.01, 0.1, g.num_vertices).astype(np.float32)
+    mn = rng.normal(size=g.num_vertices).astype(np.float32)
+    bc = ops.BlockCsr(g)
+    fused = bc.aggregate_quantized(codes, sc, mn)
+    feats = codes.astype(np.float32) * sc[:, None] + mn[:, None]
+    agg = np.zeros_like(feats)
+    np.add.at(agg, g.receivers, feats[g.senders])
+    np.testing.assert_allclose(fused, agg, rtol=1e-4, atol=2e-3)
+
+
+def test_ops_mean_aggregate_normalization():
+    g = datasets.load("yelp", scale=0.05, seed=7)
+    h = np.random.default_rng(8).normal(
+        size=(g.num_vertices, 32)).astype(np.float32)
+    out = ops.BlockCsr(g, normalize="mean").aggregate(h)
+    agg = np.zeros_like(h)
+    np.add.at(agg, g.receivers, h[g.senders])
+    want = agg / np.maximum(g.degrees, 1)[:, None]
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_block_spmm_property_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(16, 200))
+    e = int(rng.integers(n, 6 * n))
+    s, r = _random_graph(n, e, seed + 1)
+    blocks, cols, mask, pv = build_block_csr(s, r, n)
+    h = np.zeros((pv, 128), np.float32)
+    h[:n] = rng.normal(size=(n, 128)).astype(np.float32)
+    out = np.asarray(block_spmm(jnp.asarray(blocks), jnp.asarray(cols),
+                                jnp.asarray(mask), jnp.asarray(h)))
+    agg = np.zeros_like(h)
+    np.add.at(agg, r, h[s])
+    np.testing.assert_allclose(out[:n], agg[:n], rtol=1e-4, atol=1e-3)
+
+
+def test_kernel_backed_gcn_layer_matches_model():
+    """Full GCN layer with the Pallas block-CSR aggregation == the model's
+    segment-sum path (kernel as drop-in aggregation backend)."""
+    import jax
+
+    from repro.gnn import models
+    from repro.gnn.layers import EdgeList
+
+    g = datasets.load("siot", scale=0.04, seed=11)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16])
+    ref = np.asarray(models.gnn_apply(params, "gcn", g.features,
+                                      EdgeList.from_graph(g)))
+    # kernel path: aggregate via block-CSR SpMM, then the GCN update
+    bc = ops.BlockCsr(g)
+    a = bc.aggregate(g.features)
+    deg = g.degrees.astype(np.float32)
+    z = (a + g.features) / (deg + 1.0)[:, None]
+    out = z @ np.asarray(params[0]["w"]) + np.asarray(params[0]["b"])
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

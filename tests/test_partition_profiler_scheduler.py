@@ -1,0 +1,117 @@
+"""BGP partitioner invariants, profiler regression, adaptive scheduler."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition, profiler, scheduler, simulation
+from repro.core.placement import iep_place
+from repro.gnn import datasets
+from repro.gnn.graph import edge_cut
+
+
+@given(st.integers(0, 100), st.integers(2, 8))
+@settings(max_examples=15, deadline=None)
+def test_bgp_invariants(seed, n):
+    g = datasets.load("yelp", scale=0.03, seed=seed % 5)
+    a = partition.bgp(g, n, seed=seed)
+    assert a.shape == (g.num_vertices,)
+    assert a.min() >= 0 and a.max() < n
+    sizes = np.bincount(a, minlength=n)
+    assert sizes.min() >= 1
+    # balance within tolerance of the refinement (±~12%+1 of ideal)
+    ideal = g.num_vertices / n
+    assert sizes.max() <= np.ceil(ideal * 1.15) + 1
+
+
+def test_bgp_reduces_cut_vs_random():
+    g = datasets.load("siot", scale=0.05, seed=0)
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, 4, g.num_vertices)
+    ours = partition.bgp(g, 4, seed=0)
+    assert edge_cut(g, ours) < edge_cut(g, rand)
+
+
+def test_bgp_capacity_weights():
+    g = datasets.load("yelp", scale=0.05, seed=1)
+    a = partition.bgp(g, 2, weights=np.array([0.75, 0.25]), seed=0)
+    sizes = np.bincount(a, minlength=2)
+    assert sizes[0] > sizes[1]
+
+
+def test_profiler_recovers_planted_linear_model():
+    g = datasets.load("yelp", scale=0.05, seed=0)
+    beta = np.array([3e-6, 1e-7])
+    eps = 2e-3
+
+    def measure_c(c):
+        return float(beta @ np.asarray(c, np.float64) + eps)
+
+    model = profiler.profile_node_analytic(g, measure_c, seed=0)
+    # predictions within 10% across the calibration range (paper Fig. 14)
+    for ids in profiler.sample_calibration_set(g, 4, 3, seed=1):
+        c = profiler.cardinality_of(g, ids)
+        assert model.predict(c) == pytest.approx(measure_c(c), rel=0.10)
+
+
+def test_online_load_factor_two_step_estimation():
+    m = profiler.LatencyModel(beta=np.array([1e-5, 1e-6]), eps=1e-3)
+    c = (1000, 5000)
+    base = m.predict(c)
+    eta = m.observe(c, 2.0 * base)      # node got 2x slower
+    assert eta == pytest.approx(2.0, rel=1e-6)
+    c2 = (500, 2000)
+    assert m.predict(c2) == pytest.approx(
+        2.0 * (m.beta @ np.array(c2) + m.eps), rel=1e-6)
+
+
+@pytest.fixture()
+def loaded_cluster():
+    g = datasets.load("siot", scale=0.1, seed=0)
+    cluster = simulation.make_cluster("1A+2B+1C", "wifi", g)
+    fogs = cluster.fog_specs(seed=0)
+    pl = iep_place(g, fogs, seed=0, sync_cost=cluster.sync_cost)
+    return g, cluster, fogs, pl
+
+
+def test_scheduler_noop_when_balanced(loaded_cluster):
+    g, cluster, fogs, pl = loaded_cluster
+    st_ = scheduler.SchedulerState(placement=pl)
+    t = simulation.measured_exec_times(cluster, pl)
+    st_ = scheduler.schedule_step(g, st_, fogs, t, lam=1.5)
+    assert st_.mode_history[-1] == "none"
+
+
+def test_scheduler_diffusion_on_single_overload(loaded_cluster):
+    g, cluster, fogs, pl = loaded_cluster
+    st_ = scheduler.SchedulerState(placement=pl)
+    j = int(np.argmax(simulation.measured_exec_times(cluster, pl)))
+    cluster.nodes[j].background_load = 3.5
+    t = simulation.measured_exec_times(cluster, pl)
+    before = t.max()
+    st_ = scheduler.schedule_step(g, st_, fogs, t, lam=1.2)
+    assert st_.mode_history[-1].startswith("diffusion")
+    after = simulation.measured_exec_times(cluster, st_.placement).max()
+    assert after <= before + 1e-9
+
+
+def test_scheduler_global_replan_on_majority_overload(loaded_cluster):
+    g, cluster, fogs, pl = loaded_cluster
+    st_ = scheduler.SchedulerState(placement=pl)
+    # skew 3 of 4 nodes with very different loads -> mu spread, n+/n > theta
+    cluster.nodes[0].background_load = 6.0
+    cluster.nodes[1].background_load = 5.0
+    cluster.nodes[2].background_load = 4.0
+    t = simulation.measured_exec_times(cluster, pl)
+    st_ = scheduler.schedule_step(g, st_, fogs, t, lam=1.02, theta=0.25)
+    assert st_.mode_history[-1] == "replan"
+    assert st_.replans == 1
+
+
+def test_diffusion_migrates_boundary_vertices(loaded_cluster):
+    g, cluster, fogs, pl = loaded_cluster
+    fogs[0].latency_model.load_factor = 3.0   # pretend fog0 overloaded
+    new = scheduler.diffusion_adjust(g, pl.assignment, fogs, lam=1.2,
+                                     max_migrations=64)
+    moved = np.flatnonzero(new != pl.assignment)
+    if moved.size:  # migration happened -> all moved away from overloaded 0
+        assert (pl.assignment[moved] == 0).any()

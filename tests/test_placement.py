@@ -1,0 +1,112 @@
+"""IEP placement: Hungarian/LBAP exactness + placement invariants."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import placement, simulation
+from repro.core.placement import (FogSpec, hungarian, iep_place, lbap,
+                                  lbap_threshold_descending)
+from repro.core.profiler import LatencyModel
+from repro.gnn import datasets
+
+
+def brute_min_sum(cost):
+    n = cost.shape[0]
+    best = None
+    for perm in itertools.permutations(range(n)):
+        s = sum(cost[i, perm[i]] for i in range(n))
+        if best is None or s < best:
+            best = s
+    return best
+
+
+def brute_min_max(cost):
+    n = cost.shape[0]
+    best = None
+    for perm in itertools.permutations(range(n)):
+        s = max(cost[i, perm[i]] for i in range(n))
+        if best is None or s < best:
+            best = s
+    return best
+
+
+@given(st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_hungarian_optimal_vs_bruteforce(n, seed):
+    rng = np.random.default_rng(seed)
+    cost = rng.uniform(0, 10, size=(n, n))
+    assign = hungarian(cost)
+    assert sorted(assign) == list(range(n))  # a permutation
+    got = sum(cost[i, assign[i]] for i in range(n))
+    assert got <= brute_min_sum(cost) + 1e-9
+
+
+@given(st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_lbap_bottleneck_optimal(n, seed):
+    rng = np.random.default_rng(seed)
+    cost = rng.uniform(0, 10, size=(n, n))
+    assign = lbap(cost)
+    assert sorted(assign) == list(range(n))
+    got = max(cost[i, assign[i]] for i in range(n))
+    assert got <= brute_min_max(cost) + 1e-9
+
+
+@given(st.integers(2, 5), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_lbap_binary_search_equals_descending(n, seed):
+    """Paper Alg. 1 (descending thresholds) == binary-search variant."""
+    rng = np.random.default_rng(seed)
+    cost = rng.uniform(0, 10, size=(n, n))
+    a = lbap(cost)
+    b = lbap_threshold_descending(cost)
+    va = max(cost[i, a[i]] for i in range(n))
+    vb = max(cost[i, b[i]] for i in range(n))
+    assert abs(va - vb) < 1e-9
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    g = datasets.load("siot", scale=0.05, seed=0)
+    cluster = simulation.make_cluster("1A+2B+1C", "wifi", g)
+    return g, cluster, cluster.fog_specs(seed=0)
+
+
+def test_iep_placement_covers_all_vertices(small_cluster):
+    g, cluster, fogs = small_cluster
+    pl = iep_place(g, fogs, seed=0)
+    assert pl.assignment.shape == (g.num_vertices,)
+    assert pl.assignment.min() >= 0
+    assert pl.assignment.max() < len(fogs)
+    # mapping is a permutation of fogs
+    assert sorted(pl.mapping) == list(range(len(fogs)))
+
+
+def test_iep_beats_or_ties_random_and_greedy(small_cluster):
+    """Paper Fig. 8: IEP <= METIS+Greedy <= (usually) METIS+Random."""
+    g, cluster, fogs = small_cluster
+    mk = {s: iep_place(g, fogs, seed=0, strategy=s).est_makespan
+          for s in ("iep", "greedy", "random")}
+    assert mk["iep"] <= mk["greedy"] + 1e-9
+    assert mk["iep"] <= mk["random"] + 1e-9
+
+
+def test_heterogeneity_awareness(small_cluster):
+    """The most powerful fog must receive >= the weakest fog's workload."""
+    g, cluster, fogs = small_cluster
+    pl = iep_place(g, fogs, seed=0)
+    sizes = np.bincount(pl.assignment, minlength=len(fogs))
+    caps = [n.capability for n in cluster.nodes]
+    assert sizes[int(np.argmax(caps))] >= sizes[int(np.argmin(caps))]
+
+
+def test_pair_cost_formula(small_cluster):
+    """Eq. (8) = collection + execution + K*delta."""
+    g, cluster, fogs = small_cluster
+    part = np.arange(g.num_vertices // 4)
+    c = placement.pair_cost(g, part, fogs[0], bytes_per_vertex=100.0,
+                            k_layers=2, sync_cost=0.5)
+    t_colle = len(part) * 100.0 / fogs[0].bandwidth_bytes_per_s
+    assert c >= t_colle + 2 * 0.5

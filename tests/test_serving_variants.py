@@ -1,0 +1,85 @@
+"""§Perf serving variants: int8 KV cache correctness + sharding variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import sharding as shd
+from repro.models import transformer as tf
+from repro.models.attention import QuantKVCache, _dequantize_heads, \
+    _quantize_heads
+from repro.models.config import ArchConfig
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return ArchConfig(name="t", family="dense", source="t", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=512, head_dim=32,
+                      activation_dtype="float32")
+
+
+def test_quantize_heads_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)) * 3, jnp.float32)
+    q, s = _quantize_heads(x)
+    assert q.dtype == jnp.int8
+    rec = _dequantize_heads(q, s, jnp.float32)
+    # per-head max error <= scale = amax/127
+    err = jnp.abs(rec - x).max(axis=-1)
+    bound = jnp.abs(x).max(axis=-1) / 127.0 * 1.01 + 1e-7
+    assert bool((err <= bound).all())
+
+
+def test_quant_cache_decode_close_to_full(dense_cfg):
+    cfg = dense_cfg
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 512, (2, 24)),
+                       jnp.int32)
+    logits, _ = tf.forward(params, cfg, toks)
+    caches = tf.init_cache(cfg, 2, 24, quantized=True)
+    assert isinstance(jax.tree_util.tree_leaves(caches)[0], jnp.ndarray)
+    outs = []
+    for t in range(8):
+        lg, caches = tf.decode_step(params, cfg, caches, toks[:, t:t + 1],
+                                    jnp.asarray(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    rel = float(jnp.abs(dec - logits[:, :8]).max()
+                / jnp.abs(logits[:, :8]).max())
+    assert rel < 0.05, rel
+
+
+def test_serve_attn_dh_rule_only_for_indivisible_kv():
+    shd._FSDP_SIZE.update({"data": 16, "model": 16})
+    cfg = registry.get("deepseek-67b")        # kv=8, indivisible by 16
+    path = (jax.tree_util.DictKey("stages"), jax.tree_util.SequenceKey(0),
+            jax.tree_util.DictKey("mixer"), jax.tree_util.DictKey("wk"))
+    base = shd._spec_for_param(path, (95, 8192, 8, 128), cfg, 16)
+    opt = shd._spec_for_param(path, (95, 8192, 8, 128), cfg, 16,
+                              serve_attn_dh=True)
+    assert "model" not in base                 # kv heads indivisible
+    assert opt[-1] == "model"                  # head_dim sharded instead
+    cfg2 = registry.get("qwen1.5-0.5b")        # kv=16, divisible
+    opt2 = shd._spec_for_param(path, (24, 1024, 16, 64), cfg2, 16,
+                               serve_attn_dh=True)
+    assert opt2[-2] == "model"                 # unchanged: heads sharded
+
+
+def test_expert_grid_spec():
+    shd._FSDP_SIZE.update({"data": 16, "model": 16})
+    cfg = registry.get("deepseek-v3-671b")
+    path = (jax.tree_util.DictKey("stages"), jax.tree_util.SequenceKey(1),
+            jax.tree_util.DictKey("ffn"), jax.tree_util.DictKey("w_gate"))
+    spec = shd._spec_for_param(path, (58, 256, 7168, 2048), cfg, 16,
+                               expert_grid=True)
+    assert spec[1] == ("data", "model")
+    base = shd._spec_for_param(path, (58, 256, 7168, 2048), cfg, 16)
+    assert base[1] == "model"
+
+
+def test_constrain_batch_noop_without_mesh(dense_cfg):
+    shd.enable_activation_constraints(None)
+    x = jnp.ones((4, 8, 16))
+    assert shd.constrain_batch(x) is x

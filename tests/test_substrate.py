@@ -1,0 +1,231 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, sharding rules,
+HLO analyzer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint import io as ckpt
+from repro.configs import registry
+from repro.data.pipeline import SyntheticCorpus, input_specs
+from repro.launch import hlo_analysis as ha
+from repro.models import sharding as shd
+from repro.models import transformer as tfm
+from repro.models.config import INPUT_SHAPES, InputShape
+from repro.optim.adamw import AdamW, warmup_cosine
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adamw_optimizes_quadratic():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.apply(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    assert int(state.step) == 200
+
+
+def test_adamw_bf16_moments_and_weight_decay():
+    opt = AdamW(learning_rate=0.01, weight_decay=0.5,
+                moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    p2, _ = opt.apply(params, {"w": jnp.zeros((4, 4))}, state)
+    assert float(p2["w"].mean()) < 1.0  # decay applied with zero grads
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(5))) == pytest.approx(5e-4)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3, rel=1e-2)
+    assert float(lr(jnp.asarray(100))) < 2e-4
+
+
+# ------------------------------------------------------------ data pipeline
+
+def test_pipeline_deterministic_and_shaped():
+    cfg = registry.reduced(registry.get("granite-3-2b"))
+    shape = InputShape("t", seq_len=64, global_batch=4, kind="train")
+    c1 = SyntheticCorpus(cfg, shape, seed=7)
+    c2 = SyntheticCorpus(cfg, shape, seed=7)
+    b1, b2 = c1.batch(3), c2.batch(3)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    assert b1["inputs"].shape == (4, 64)
+    assert b1["targets"].shape == (4, 64)
+    assert (b1["inputs"][:, 1:] == b1["targets"][:, :-1]).all()
+    assert b1["inputs"].max() < cfg.vocab_size
+    b4 = c1.batch(4)
+    assert not np.array_equal(b1["inputs"], b4["inputs"])
+
+
+def test_pipeline_learnable_structure():
+    """A model must be able to beat uniform loss on the synthetic corpus."""
+    cfg = registry.reduced(registry.get("qwen1.5-0.5b"))
+    shape = InputShape("t", seq_len=64, global_batch=8, kind="train")
+    corpus = SyntheticCorpus(cfg, shape, seed=0)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=3e-3)
+    step = jax.jit(tfm.make_train_step(cfg, opt, microbatches=1))
+    state = opt.init(params)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in corpus.batch(i).items()}
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3  # actually learning
+
+
+def test_input_specs_all_combinations():
+    for arch in registry.list_archs():
+        cfg = registry.get(arch)
+        for shape in INPUT_SHAPES.values():
+            spec = input_specs(cfg, shape)
+            assert all(hasattr(v, "shape") for v in spec.values())
+            if shape.kind == "decode":
+                assert spec["tokens"].shape == (shape.global_batch, 1)
+            elif cfg.input_mode == "embeddings":
+                assert spec["inputs"].shape[-1] == cfg.d_model
+
+
+# ------------------------------------------------------------- checkpointing
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = registry.reduced(registry.get("granite-3-2b"))
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW()
+    state = opt.init(params)
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 7, {"params": params, "opt": state})
+    assert ckpt.latest_step(d) == 7
+    target = jax.eval_shape(lambda: {"params": params, "opt": state})
+    restored = ckpt.restore(d, target)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    d = str(tmp_path / "c")
+    for s in range(6):
+        ckpt.save(d, s, {"x": jnp.ones(3) * s}, keep=2)
+    assert ckpt.latest_step(d) == 5
+    files = sorted(os.listdir(d))
+    assert len(files) == 2
+
+
+# ----------------------------------------------------------------- sharding
+
+@pytest.fixture(scope="module")
+def mesh4():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_param_specs_divisibility_invariant():
+    """Every sharded dim must be divisible by the mesh axis it maps to."""
+    import jax.sharding as jsh
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in registry.list_archs():
+        cfg = registry.get(arch)
+        abs_p = tfm.abstract_params(cfg)
+        # simulate 16-way model axis via the rule function directly
+        flat = jax.tree_util.tree_flatten_with_path(abs_p)[0]
+        for path, leaf in flat:
+            spec = shd._spec_for_param(path, leaf.shape, cfg, 16)
+            for ax, part in enumerate(spec):
+                if part == "model":
+                    assert leaf.shape[ax] % 16 == 0, (arch, path, leaf.shape)
+
+
+def test_fsdp_specs_add_data_axis():
+    cfg = registry.get("deepseek-v3-671b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert shd.needs_fsdp(cfg, jax.make_mesh((16, 16), ("data", "model"))
+                          if False else mesh, train=True) in (True, False)
+    # direct rule check: expert weights get both axes at 16x16 sizes
+    shd._FSDP_SIZE.update({"data": 16, "model": 16})
+    spec = shd._spec_for_param(
+        (jax.tree_util.DictKey("stages"), jax.tree_util.SequenceKey(0),
+         jax.tree_util.DictKey("ffn"), jax.tree_util.DictKey("w_gate")),
+        (58, 256, 7168, 2048), cfg, 16, fsdp_axes=("data",))
+    assert "model" in spec and "data" in spec
+
+
+def test_batch_spec_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # on a trivial mesh batch=1 may map to the size-1 data axis or replicate
+    assert shd.batch_spec(mesh, 1, 2) in (P(None, None), P(("data",), None),
+                                          P("data", None))
+    # batch=3 on a size-1 data axis: 3 % 1 == 0, also fine; the invariant
+    # is that any named axis has size dividing the batch
+    spec = shd.batch_spec(mesh, 3, 2)
+    for part in spec:
+        if part:
+            axes = part if isinstance(part, tuple) else (part,)
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            assert 3 % total == 0
+
+
+# -------------------------------------------------------------- hlo analysis
+
+SAMPLE_HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8]{1,0} all-gather(%d), dimensions={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ag)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> (s32[], f32[8,8]) {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%z, %a)
+  ROOT %w0 = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_hlo_analyzer_scales_by_trip_count():
+    cost = ha.analyze(SAMPLE_HLO)
+    # one 8x8x8 dot per iteration, 10 iterations
+    assert cost.flops == pytest.approx(10 * 2 * 8 * 8 * 8)
+    assert cost.collective_bytes["all-gather"] == pytest.approx(
+        10 * 8 * 8 * 4)
+
+
+def test_hlo_analyzer_on_real_module():
+    """Analyzer FLOPs for a compiled scan-matmul ~= analytic count."""
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=12)
+        return h
+
+    x = jnp.ones((32, 64))
+    w = jnp.ones((64, 64))
+    compiled = jax.jit(f).lower(x, w).compile()
+    cost = ha.analyze(compiled.as_text())
+    expect = 12 * 2 * 32 * 64 * 64
+    assert cost.flops == pytest.approx(expect, rel=0.05)
