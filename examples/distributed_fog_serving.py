@@ -1,9 +1,10 @@
 """Distributed BSP inference over a real multi-device JAX mesh.
 
-Each of 4 virtual fog devices owns a vertex partition; every GNN layer
-does a halo exchange (jax.lax collectives under shard_map), exactly the
-paper's BSP runtime (SSIII-E). Must set the device-count flag BEFORE jax
-imports, hence the first lines.
+The same Engine config switches executor backends by key: "single" runs
+the one-program reference, "mesh-bsp" runs the paper's BSP runtime
+(§III-E) with one device per fog partition and a halo/allgather collective
+per GNN layer. Must set the device-count flag BEFORE jax imports, hence
+the first lines.
 
     PYTHONPATH=src python examples/distributed_fog_serving.py
 """
@@ -14,26 +15,30 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import partition  # noqa: E402
+from repro.api import Engine  # noqa: E402
 from repro.gnn import datasets, models  # noqa: E402
-from repro.gnn.layers import EdgeList  # noqa: E402
-from repro.runtime import bsp  # noqa: E402
 
 print("devices:", jax.devices())
 g = datasets.load("yelp", scale=0.1, seed=0)
 params, _ = models.train_node_classifier(jax.random.PRNGKey(0), "sage", g,
                                          steps=60)
 
-assign = partition.bgp(g, 4, seed=0)  # min-cut balanced partitions
-pg = bsp.build_partitioned(g, assign)
-print(f"partitions: slots={pg.slots} edges/part={pg.edges_per_part} "
-      f"boundary={pg.boundary_slots}")
+# One shared config; only the executor / exchange registry keys change.
+base = dict(cluster="4B", network="wifi", compressor="none")
+ref = Engine((params, "sage"), executor="single",
+             **base).compile(g).session().query()
+
 for ex in ("allgather", "halo"):
-    out = bsp.bsp_infer(params, "sage", g, assign, exchange=ex)
-    ref = np.asarray(models.gnn_apply(params, "sage", g.features,
-                                      EdgeList.from_graph(g)))
-    print(f"exchange={ex:10s} bytes/sync="
-          f"{bsp.exchange_bytes(pg, g.feature_dim, ex):>10,d} "
-          f"max|dist - single|={np.abs(out - ref).max():.2e}")
+    engine = Engine((params, "sage"), executor="mesh-bsp", exchange=ex,
+                    **base)
+    plan = engine.compile(g)
+    if ex == "allgather":
+        pg = plan.partitioned
+        print(f"partitions: slots={pg.slots} edges/part={pg.edges_per_part} "
+              f"boundary={pg.boundary_slots}")
+    r = plan.session().query()
+    err = float(np.abs(r.embeddings - ref.embeddings).max())
+    print(f"exchange={ex:10s} bytes/sync={r.exchange_bytes:>10,d} "
+          f"max|dist - single|={err:.2e}")
 print("halo exchange moves only boundary rows — the paper's "
       "'exchange vertices data when needed'.")

@@ -1,12 +1,19 @@
-"""Quickstart: deploy Fograph on a simulated fog cluster and serve a query.
+"""Quickstart: compile a Fograph serving plan and serve queries.
+
+The whole paper workflow (Fig. 5/6) behind one API:
+
+    Engine(model, cluster, **knobs).compile(graph) -> Plan   (setup phase)
+    Plan.session() -> Session                                 (runtime)
+    Session.query() / .stream() / .adapt()
 
     PYTHONPATH=src python examples/quickstart.py
+    (or, after `pip install -e .`:  fograph-demo)
 """
 import jax
 import numpy as np
 
+from repro.api import Engine
 from repro.gnn import datasets, models
-from repro.runtime import serving
 
 # 1. Data + a trained GNN (SIoT-style social-IoT graph, GCN classifier).
 graph = datasets.load("siot", scale=0.1, seed=0)
@@ -15,25 +22,31 @@ params, loss = models.train_node_classifier(
 print(f"trained 2-layer GCN on |V|={graph.num_vertices} "
       f"|E|={graph.num_edges} (loss {loss:.3f})")
 
-# 2. Setup phase: profile the heterogeneous fog nodes, register metadata,
-#    and plan the data placement with the Inference Execution Planner.
-svc = serving.deploy(graph, params, "gcn",
-                     cluster_spec="1A+4B+1C",   # paper Table II node types
-                     network="wifi", compress="daq")
-print("placement (vertices per fog):",
-      np.bincount(svc.placement.assignment))
-print(f"estimated makespan: {svc.placement.est_makespan:.3f}s")
+# 2. Setup phase: every pipeline stage is a registry key — swap
+#    placement="metis+greedy", compressor="uniform8", executor="mesh-bsp",
+#    ... with no other code changes.
+engine = Engine((params, "gcn"),
+                cluster="1A+4B+1C",   # paper Table II node types
+                network="wifi", compressor="daq", placement="iep",
+                executor="sim")
+plan = engine.compile(graph)          # profile + IEP placement, frozen
+print("placement (vertices per fog):", plan.vertices_per_fog())
+print(f"estimated makespan: {plan.est_makespan:.3f}s")
 
-# 3. Runtime phase: compressed collection -> distributed inference.
-result = serving.serve_query(svc)
-acc = float(models.accuracy(result.embeddings, graph.labels))
-print(f"latency {result.latency:.3f}s  throughput {result.throughput:.2f}/s"
-      f"  wire {result.wire_bytes / 1e3:.1f} KB  accuracy {acc:.4f}")
+# 3. Runtime phase: a session serves repeated queries and owns the
+#    adaptive-scheduler state; the plan stays immutable.
+session = plan.session(accuracy_fn=lambda emb: float(
+    models.accuracy(emb, graph.labels)))
+result = session.query()
+print(f"latency {result.latency:.3f}s  "
+      f"throughput {result.throughput:.2f}/s  "
+      f"wire {result.wire_bytes / 1e3:.1f} KB  "
+      f"accuracy {result.accuracy:.4f}  [{result.backend}]")
 
 # 4. Adaptive scheduling: overload the busiest node, watch the dual-mode
 #    scheduler migrate vertices away (paper Fig. 10 diffusion).
 from repro.core import simulation  # noqa: E402
-t = simulation.measured_exec_times(svc.cluster, svc.state.placement)
-svc.cluster.nodes[int(np.argmax(t))].background_load = 2.5
-print("scheduler action after overload:", serving.adapt(svc, lam=1.2))
-print("latency after adaptation:", f"{serving.serve_query(svc).latency:.3f}s")
+t = simulation.measured_exec_times(plan.cluster, session.placement)
+plan.cluster.nodes[int(np.argmax(t))].background_load = 2.5
+print("scheduler action after overload:", session.adapt(lam=1.2))
+print("latency after adaptation:", f"{session.query().latency:.3f}s")

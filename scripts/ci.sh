@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification: full test suite from a clean checkout.
+# pyproject.toml's [tool.pytest.ini_options] pythonpath handles src/, so no
+# PYTHONPATH incantation is needed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+python -m pytest -x -q "$@"

@@ -1,0 +1,36 @@
+"""Public serving API: ``Engine(model, cluster).compile(graph).session()``.
+
+Exports resolve lazily (PEP 562): core modules register their components
+into ``repro.api.registry`` at import time, and a lazy ``__init__`` keeps
+that registration free of circular imports (core -> api.registry is a leaf
+edge; api.engine -> core happens only on first attribute access).
+"""
+from repro.api.registry import (ALL_REGISTRIES, COMPRESSORS, EXCHANGES,
+                                EXECUTORS, PARTITIONERS, PLACEMENTS,
+                                Registry, UnknownComponentError)
+
+_LAZY = {
+    "Engine": "repro.api.engine",
+    "Plan": "repro.api.plan",
+    "EngineConfig": "repro.api.plan",
+    "ModelSpec": "repro.api.plan",
+    "as_model": "repro.api.plan",
+    "Session": "repro.api.session",
+    "QueryResult": "repro.api.session",
+    "ExecutorBackend": "repro.api.executors",
+}
+
+__all__ = sorted(["Registry", "UnknownComponentError", "ALL_REGISTRIES",
+                  "PARTITIONERS", "PLACEMENTS", "COMPRESSORS", "EXCHANGES",
+                  "EXECUTORS", *_LAZY])
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,104 @@
+"""Engine: the single front door to the Fograph serving pipeline.
+
+    Engine(model, cluster, **knobs).compile(graph) -> Plan
+    Plan.session() -> Session
+    Session.query() / Session.stream(...) -> QueryResult(s)
+
+``Engine`` captures the pipeline *configuration* (every stage is a
+string-keyed registry entry); ``compile`` runs the paper's setup phase once
+— fog profiling/metadata registration, IEP data placement, static-shape
+partition buffers — and freezes the result into an immutable ``Plan``.
+Swapping the executor backend between "sim", "single" and "mesh-bsp" (or
+the compressor/exchange/placement between their registry keys) changes no
+other code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.api import executors as _executors  # noqa: F401  (registers backends)
+from repro.api.registry import (COMPRESSORS, EXCHANGES, EXECUTORS,
+                                PARTITIONERS, PLACEMENTS)
+from repro.api.plan import EngineConfig, ModelSpec, Plan, as_model
+from repro.core import simulation
+from repro.gnn.graph import Graph
+from repro.runtime import bsp
+
+
+class Engine:
+    """A configured-but-uncompiled serving pipeline.
+
+    Args:
+      model: ``ModelSpec`` or ``(params, kind)`` pair.
+      cluster: a cluster-spec string like ``"1A+4B+1C"`` (paper Table II
+        node types; built at compile time against the query graph) or a
+        prebuilt ``simulation.FogCluster``.
+      partitioner / placement / compressor / exchange / executor: registry
+        keys for the five pluggable stages. Unknown keys raise immediately
+        with the list of available options.
+      network: collection-network profile ("wifi" / "4g" / "5g").
+      hidden: hidden width used by the analytic workload model.
+      sync_cost: one BSP synchronization (delta in Eq. 6/7).
+      bytes_per_vertex: per-vertex upload size for planning (defaults to
+        the graph's raw float64 feature bytes).
+      seed: profiling/placement RNG seed.
+    """
+
+    def __init__(self, model, cluster: Union[str, "simulation.FogCluster"]
+                 = "1A+4B+1C", *, network: str = "wifi",
+                 partitioner: str = "bgp", placement: str = "iep",
+                 compressor: str = "daq", exchange: str = "halo",
+                 executor: str = "sim", hidden: int = 64, seed: int = 0,
+                 sync_cost: float = simulation.DEFAULT_SYNC_COST,
+                 bytes_per_vertex: Optional[float] = None):
+        self.model: ModelSpec = as_model(model)
+        self.cluster = cluster
+        # Resolve every stage eagerly so bad keys fail at construction.
+        self._partitioner = PARTITIONERS.resolve(partitioner)
+        self._placement = PLACEMENTS.resolve(placement)
+        self._compressor = COMPRESSORS.resolve(
+            "none" if compressor is None else compressor)
+        self._exchange = EXCHANGES.resolve(exchange)
+        self._executor = EXECUTORS.resolve(executor)
+        self.config = EngineConfig(
+            partitioner=PARTITIONERS.canonical(partitioner),
+            placement=PLACEMENTS.canonical(placement),
+            compressor=COMPRESSORS.canonical(
+                "none" if compressor is None else compressor),
+            exchange=EXCHANGES.canonical(exchange),
+            executor=EXECUTORS.canonical(executor),
+            network=network,
+            cluster_spec=cluster if isinstance(cluster, str) else None,
+            hidden=hidden, seed=seed, sync_cost=sync_cost,
+            bytes_per_vertex=bytes_per_vertex)
+
+    def compile(self, graph: Graph) -> Plan:
+        """Setup phase (paper steps 1-2): profile, register, plan, freeze."""
+        cfg = self.config
+        if isinstance(self.cluster, str):
+            cluster = simulation.make_cluster(
+                self.cluster, cfg.network, graph, hidden=cfg.hidden,
+                k_layers=self.model.num_layers, seed=cfg.seed,
+                sync_cost=cfg.sync_cost)
+        else:
+            cluster = self.cluster
+        # step 1: metadata registration — profile every fog node.
+        fogs = tuple(cluster.fog_specs(seed=cfg.seed))
+        # step 2: execution planning — partition + partition->fog mapping.
+        placement = self._placement.place(
+            graph, fogs, k_layers=self.model.num_layers,
+            sync_cost=cluster.sync_cost, seed=cfg.seed,
+            bytes_per_vertex=cfg.bytes_per_vertex,
+            partitioner=self._partitioner)
+        # Freeze the static-shape per-partition buffers once.
+        partitioned = bsp.build_partitioned(graph, placement.assignment)
+        return Plan(model=self.model, graph=graph, cluster=cluster,
+                    fogs=fogs, placement=placement, partitioned=partitioned,
+                    config=cfg)
+
+    def __repr__(self) -> str:
+        c = self.config
+        return (f"Engine(kind={self.model.kind!r}, "
+                f"cluster={c.cluster_spec or 'custom'}, "
+                f"placement={c.placement!r}, compressor={c.compressor!r}, "
+                f"exchange={c.exchange!r}, executor={c.executor!r})")

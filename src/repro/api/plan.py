@@ -1,0 +1,112 @@
+"""Compiled execution plans (the frozen output of ``Engine.compile``).
+
+A ``Plan`` is the paper's "execution plan" artifact: profiling + IEP
+placement have already run, the per-partition static-shape buffers are
+frozen, and every pipeline component is resolved to a registry entry. Plans
+are immutable — serving state (adaptive-scheduler migrations, query
+counters) lives in ``Session`` objects spawned from the plan, so one plan
+can back many concurrent sessions without interference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.placement import FogSpec, Placement
+from repro.core.simulation import FogCluster
+from repro.gnn.graph import Graph
+from repro.gnn.layers import LAYER_FNS
+from repro.runtime.bsp import PartitionedGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """The GNN being served: per-layer params + layer kind (Table I)."""
+    params: tuple
+    kind: str
+
+    def __post_init__(self):
+        if self.kind not in LAYER_FNS:
+            raise ValueError(f"unknown GNN kind {self.kind!r}; "
+                             f"available: {', '.join(sorted(LAYER_FNS))}")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.params)
+
+
+def as_model(model) -> ModelSpec:
+    """Coerce ``(params, kind)`` / ``(kind, params)`` / ModelSpec."""
+    if isinstance(model, ModelSpec):
+        return model
+    if isinstance(model, (tuple, list)) and len(model) == 2:
+        a, b = model
+        if isinstance(a, str):
+            return ModelSpec(params=tuple(b), kind=a)
+        return ModelSpec(params=tuple(a), kind=b)
+    raise TypeError("model must be a ModelSpec or a (params, kind) pair, "
+                    f"got {type(model).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Resolved registry keys + knobs an Engine compiled with."""
+    partitioner: str
+    placement: str
+    compressor: str
+    exchange: str
+    executor: str
+    network: str
+    cluster_spec: Optional[str]
+    hidden: int
+    seed: int
+    sync_cost: float
+    bytes_per_vertex: Optional[float] = None
+
+    def with_overrides(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An immutable compiled serving plan: Engine.compile(graph) -> Plan."""
+    model: ModelSpec
+    graph: Graph
+    cluster: FogCluster
+    fogs: Tuple[FogSpec, ...]
+    placement: Placement
+    partitioned: PartitionedGraph
+    config: EngineConfig
+
+    @property
+    def num_fogs(self) -> int:
+        return len(self.fogs)
+
+    @property
+    def est_makespan(self) -> float:
+        return self.placement.est_makespan
+
+    def vertices_per_fog(self) -> np.ndarray:
+        return np.bincount(self.placement.assignment,
+                           minlength=self.num_fogs)
+
+    def session(self, **kw) -> "Session":
+        """Open a serving session (owns all mutable runtime state)."""
+        from repro.api.session import Session
+        return Session(self, **kw)
+
+    def describe(self) -> dict:
+        """Plain-dict summary (for logs / dashboards)."""
+        return {
+            "model": {"kind": self.model.kind,
+                      "layers": self.model.num_layers},
+            "graph": {"vertices": self.graph.num_vertices,
+                      "edges": self.graph.num_edges,
+                      "feature_dim": self.graph.feature_dim},
+            "fogs": [f.name for f in self.fogs],
+            "vertices_per_fog": self.vertices_per_fog().tolist(),
+            "est_makespan": self.est_makespan,
+            "pipeline": dataclasses.asdict(self.config),
+        }

@@ -1,0 +1,176 @@
+"""Serving sessions: repeated/batched queries over a compiled Plan.
+
+A ``Session`` owns every piece of mutable runtime state the old
+``FographService`` grab-bag mixed into one dataclass:
+
+  * the adaptive scheduler's ``SchedulerState`` (placement drift, mode
+    history) — seeded from a *copy* of the plan's placement, so the plan
+    itself stays frozen,
+  * the partitioned-buffer cache (rebuilt only when adaptation migrates
+    vertices),
+  * query counters for the ``adapt_every`` tick.
+
+Every query returns a ``QueryResult`` with one unified metrics schema
+across executor backends (sim / single / mesh-bsp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Iterator, Optional, Union
+
+import numpy as np
+
+from repro.api import executors as _executors  # noqa: F401  (registers backends)
+from repro.api.registry import (COMPRESSORS, EXCHANGES, EXECUTORS,
+                                PARTITIONERS)
+from repro.core import simulation
+from repro.core.scheduler import SchedulerState, schedule_step
+from repro.gnn.graph import Graph
+from repro.runtime import bsp
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Unified per-query metrics, identical across executor backends.
+
+    ``breakdown`` keys: collect / execute / unpack / total (seconds, for
+    the bottleneck fog). ``exchange_bytes`` is the per-BSP-sync collective
+    payload under the plan's exchange strategy (0 for the single backend,
+    which has no cross-fog sync). ``accuracy`` is filled by the session's
+    ``accuracy_fn`` hook when one is installed.
+    """
+    embeddings: np.ndarray
+    latency: float
+    throughput: float
+    breakdown: Dict[str, float]
+    wire_bytes: float
+    exchange_bytes: int
+    backend: str
+    accuracy: Optional[float] = None
+
+
+class Session:
+    """Live serving handle for one Plan: ``query``, ``stream``, ``adapt``."""
+
+    def __init__(self, plan, *, executor: Optional[str] = None,
+                 lam: float = 1.3, theta: float = 0.5,
+                 adapt_every: int = 0,
+                 accuracy_fn: Optional[Callable[[np.ndarray], float]] = None,
+                 seed: Optional[int] = None):
+        self.plan = plan
+        cfg = plan.config
+        self._executor_key = cfg.executor if executor is None else executor
+        self._executor = EXECUTORS.resolve(self._executor_key)
+        self._compressor = COMPRESSORS.resolve(cfg.compressor)
+        self._exchange = EXCHANGES.resolve(cfg.exchange)
+        self.lam = lam
+        self.theta = theta
+        self.adapt_every = int(adapt_every)
+        self.accuracy_fn = accuracy_fn
+        self.seed = cfg.seed if seed is None else seed
+        # Mutable scheduler state starts from a COPY of the frozen plan's
+        # placement and latency models: adaptation (which migrates vertices
+        # AND updates the online load factor eta in place) must never write
+        # through to the plan, or sibling sessions would see it.
+        self.state = SchedulerState(placement=dataclasses.replace(
+            plan.placement,
+            assignment=np.array(plan.placement.assignment, copy=True)))
+        self.fogs = [dataclasses.replace(
+            f, latency_model=dataclasses.replace(
+                f.latency_model, beta=np.array(f.latency_model.beta)))
+            for f in plan.fogs]
+        self.num_queries = 0
+        self._partitioned = plan.partitioned  # valid for the initial layout
+        self._executor.check(plan)
+
+    # -- runtime ------------------------------------------------------------
+
+    @property
+    def placement(self):
+        """The session's *current* (possibly adapted) placement."""
+        return self.state.placement
+
+    def partitioned(self) -> bsp.PartitionedGraph:
+        """Static-shape buffers for the current assignment (cached)."""
+        if self._partitioned is None:
+            self._partitioned = bsp.build_partitioned(
+                self.plan.graph, self.state.placement.assignment)
+        return self._partitioned
+
+    def query(self, features: Optional[np.ndarray] = None, *,
+              executor: Optional[str] = None) -> QueryResult:
+        """Serve one inference query (steps 3-4 of the paper's workflow).
+
+        ``features`` overrides the graph's stored features for this query
+        (fresh sensor uploads); ``executor`` overrides the backend for this
+        query only.
+        """
+        plan = self.plan
+        g: Graph = plan.graph
+        backend = (self._executor if executor is None
+                   else EXECUTORS.resolve(executor))
+        if backend is not self._executor:
+            backend.check(plan)
+        # step 3: compressed collection (real pack/unpack round-trip).
+        raw = g.features if features is None else np.asarray(features)
+        feats = self._compressor.roundtrip(raw, g.degrees)
+        # step 4: distributed runtime (real numerics).
+        emb = backend.run(plan, feats, self.state.placement.assignment,
+                          self.partitioned(), self._exchange.name)
+        # latency accounting from the simulated fog cluster.
+        res = simulation.simulate(backend.pipeline, plan.cluster,
+                                  self.state.placement,
+                                  compress=self._compressor.sim_key)
+        breakdown = dict(res.breakdown())
+        breakdown["unpack"] = float(res.unpack.max())
+        if backend.pipeline == "multi":
+            xbytes = self._exchange.bytes_per_sync(self.partitioned(),
+                                                   g.feature_dim)
+        else:
+            xbytes = 0
+        acc = None if self.accuracy_fn is None else float(
+            self.accuracy_fn(emb))
+        self.num_queries += 1
+        out = QueryResult(embeddings=emb, latency=res.total_latency,
+                          throughput=res.throughput, breakdown=breakdown,
+                          wire_bytes=res.wire_bytes, exchange_bytes=xbytes,
+                          backend=backend.name, accuracy=acc)
+        # step 5: adaptive scheduling tick, owned by the session.
+        if self.adapt_every and self.num_queries % self.adapt_every == 0:
+            self.adapt()
+        return out
+
+    def stream(self, queries: Union[int, Iterable]) -> Iterator[QueryResult]:
+        """Serve a batch of queries; yields one QueryResult each.
+
+        ``queries`` is either a count (re-serve the stored features) or an
+        iterable of feature arrays (None entries use stored features).
+        """
+        if isinstance(queries, int):
+            queries = (None for _ in range(queries))
+        for feats in queries:
+            yield self.query(feats)
+
+    # -- adaptation ---------------------------------------------------------
+
+    def adapt(self, *, lam: Optional[float] = None,
+              theta: Optional[float] = None,
+              seed: Optional[int] = None) -> str:
+        """One adaptive-scheduler tick (Alg. 2); returns the action taken."""
+        plan = self.plan
+        t_real = simulation.measured_exec_times(plan.cluster,
+                                                self.state.placement)
+        before = self.state.placement.assignment
+        self.state = schedule_step(
+            plan.graph, self.state, self.fogs, t_real,
+            lam=self.lam if lam is None else lam,
+            theta=self.theta if theta is None else theta,
+            k_layers=plan.model.num_layers,
+            sync_cost=plan.cluster.sync_cost,
+            bytes_per_vertex=plan.config.bytes_per_vertex,
+            seed=self.seed if seed is None else seed,
+            replan_strategy=plan.config.placement,
+            replan_partitioner=PARTITIONERS.resolve(plan.config.partitioner))
+        if not np.array_equal(before, self.state.placement.assignment):
+            self._partitioned = None  # layout changed: invalidate buffers
+        return self.state.mode_history[-1]

@@ -193,6 +193,41 @@ def uniform_pack(features: np.ndarray, nbits: int = 8,
                     bits=(nbits,) * 4, lossless=lossless)
 
 
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """A COMPRESSORS registry entry: one device-upload codec.
+
+    ``roundtrip`` packs and unpacks features exactly as devices/fogs would,
+    so downstream numerics carry the true quantization error. ``sim_key``
+    is the wire-byte accounting key understood by
+    ``simulation._partition_wire_bytes`` (None = raw upload).
+    """
+    name: str
+    sim_key: Optional[str]
+    pack: Optional[Callable[[np.ndarray, np.ndarray], PackedFeatures]]
+
+    def roundtrip(self, features: np.ndarray,
+                  degrees: np.ndarray) -> np.ndarray:
+        if self.pack is None:
+            return np.asarray(features, np.float32)
+        packed = self.pack(np.asarray(features, np.float64), degrees)
+        return daq_unpack(packed).astype(np.float32)
+
+
+def _register_compressors():
+    from repro.api.registry import COMPRESSORS
+    COMPRESSORS.register("none", Compressor("none", None, None))
+    COMPRESSORS.register("daq", Compressor(
+        "daq", "daq", lambda x, d: daq_pack(x, d)))
+    COMPRESSORS.register("daq_noll", Compressor(
+        "daq_noll", "daq_noll", lambda x, d: daq_pack(x, d, lossless=False)))
+    COMPRESSORS.register("uniform8", Compressor(
+        "uniform8", "uniform8", lambda x, d: uniform_pack(x, 8)))
+
+
+_register_compressors()
+
+
 def end_to_end_sizes(features: np.ndarray, degrees: np.ndarray,
                      **kw) -> dict:
     """Raw vs DAQ vs DAQ+lossless byte sizes (for communication accounting)."""

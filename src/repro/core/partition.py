@@ -21,6 +21,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.api.registry import PARTITIONERS
 from repro.gnn.graph import Graph, edge_cut
 
 
@@ -153,6 +154,9 @@ def bgp(g: Graph, n: int, weights: Optional[np.ndarray] = None,
     assignment = _region_grow(g, n, capacity, rng)
     assignment = _refine(g, assignment, capacity, passes=refine_passes)
     return assignment
+
+
+PARTITIONERS.register("bgp", bgp)
 
 
 def partition_stats(g: Graph, assignment: np.ndarray) -> dict:

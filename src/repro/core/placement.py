@@ -19,6 +19,7 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.api.registry import PLACEMENTS
 from repro.core.partition import bgp
 from repro.core.profiler import LatencyModel, cardinality_of
 from repro.gnn.graph import Graph
@@ -219,50 +220,101 @@ def _finish(g: Graph, parts: List[np.ndarray], mapping: np.ndarray,
                      est_collect=est_collect, est_exec=est_exec)
 
 
+def match_bottleneck(cost: np.ndarray, seed: int = 0) -> np.ndarray:
+    """IEP's partition->fog matcher: exact LBAP bottleneck assignment."""
+    return lbap(cost)
+
+
+def match_greedy(cost: np.ndarray, seed: int = 0) -> np.ndarray:
+    """METIS+Greedy baseline: rows pick their cheapest unused fog in order."""
+    n = cost.shape[0]
+    mapping = -np.ones(n, dtype=np.int64)
+    used = np.zeros(n, dtype=bool)
+    for k in range(n):
+        order = np.argsort(cost[k])
+        j = next(int(jj) for jj in order if not used[jj])
+        mapping[k] = j
+        used[j] = True
+    return mapping
+
+
+def match_random(cost: np.ndarray, seed: int = 0) -> np.ndarray:
+    """METIS+Random / straw-man: stochastic partition->fog mapping."""
+    return np.random.default_rng(seed).permutation(cost.shape[0])
+
+
+# canonical registry key -> (matcher, heterogeneity-aware partition sizing)
+_STRATEGIES = {
+    "iep": (match_bottleneck, True),
+    "metis+greedy": (match_greedy, False),
+    "random": (match_random, False),
+}
+
+
 def iep_place(g: Graph, fogs: Sequence[FogSpec], *,
               bytes_per_vertex: Optional[float] = None,
               k_layers: int = 2, sync_cost: float = 5e-3,
               seed: int = 0, strategy: str = "iep",
-              capacity_weights: Optional[np.ndarray] = None) -> Placement:
+              capacity_weights: Optional[np.ndarray] = None,
+              partitioner: Optional[Callable] = None) -> Placement:
     """Full IEP data placement (Alg. 1) and its baselines.
 
     strategy:
-      "iep"     BGP + LBAP bottleneck mapping        (the paper's algorithm)
-      "greedy"  BGP + greedy min-edge-weight mapping (METIS+Greedy baseline)
-      "random"  BGP + stochastic mapping             (METIS+Random / straw-man)
+      "iep"           BGP + LBAP bottleneck mapping    (the paper's algorithm)
+      "metis+greedy"  BGP + greedy min-cost mapping    (METIS+Greedy baseline;
+                      "greedy" is accepted as an alias)
+      "random"        BGP + stochastic mapping         (METIS+Random/straw-man)
+
+    ``partitioner`` overrides the BGP solver (same signature as
+    ``partition.bgp``); any ``PARTITIONERS`` registry entry qualifies.
     """
     n = len(fogs)
+    strategy = PLACEMENTS.canonical(strategy)  # aliases live in the registry
+    if strategy not in _STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"available: {', '.join(sorted(_STRATEGIES))}")
+    matcher, het_sizing = _STRATEGIES[strategy]
+    if partitioner is None:
+        partitioner = bgp
     if bytes_per_vertex is None:
         bytes_per_vertex = g.feature_dim * 8.0  # float64 features, Q=64
-    if capacity_weights is None and strategy == "iep":
+    if capacity_weights is None and het_sizing:
         # Heterogeneity-aware partition sizing (paper Fig. 13b: the type-C
         # fog holds the most vertices): equal-size partitions cannot
         # balance a heterogeneous cluster no matter how they are mapped,
         # so IEP sizes partitions by profiled total per-vertex cost. The
         # baselines (METIS+Random / METIS+Greedy) keep straw-man sizing.
         capacity_weights = capability_weights(fogs, g, bytes_per_vertex)
-    part_assign = bgp(g, n, weights=capacity_weights, seed=seed)
+    part_assign = partitioner(g, n, weights=capacity_weights, seed=seed)
     parts = [np.flatnonzero(part_assign == k) for k in range(n)]
-    if strategy == "random":
-        rng = np.random.default_rng(seed)
-        mapping = rng.permutation(n)
-    else:
-        cost = _build_cost_matrix(g, parts, fogs, bytes_per_vertex,
-                                  k_layers, sync_cost)
-        if strategy == "iep":
-            mapping = lbap(cost)
-        elif strategy == "greedy":
-            mapping = -np.ones(n, dtype=np.int64)
-            used = np.zeros(n, dtype=bool)
-            for k in range(n):
-                order = np.argsort(cost[k])
-                j = next(int(jj) for jj in order if not used[jj])
-                mapping[k] = j
-                used[j] = True
-        else:
-            raise ValueError(f"unknown strategy {strategy!r}")
+    cost = _build_cost_matrix(g, parts, fogs, bytes_per_vertex,
+                              k_layers, sync_cost)
+    mapping = matcher(cost, seed=seed)
     return _finish(g, parts, mapping, fogs, bytes_per_vertex, k_layers,
                    sync_cost, part_assign)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementStrategy:
+    """A PLACEMENTS registry entry: one partition->fog mapping policy.
+
+    ``place`` runs the full vertex placement (step 2 of the paper's
+    workflow); ``match`` exposes the bare cost-matrix matcher so non-graph
+    substrates (e.g. the transformer pod scheduler in ``launch.serve``)
+    reuse the same policy on their own cost models.
+    """
+    name: str
+    matcher: Callable[..., np.ndarray]
+
+    def place(self, g: Graph, fogs: Sequence[FogSpec], **kw) -> Placement:
+        return iep_place(g, fogs, strategy=self.name, **kw)
+
+    def match(self, cost: np.ndarray, seed: int = 0) -> np.ndarray:
+        return self.matcher(np.asarray(cost, np.float64), seed=seed)
+
+
+for _name, (_matcher, _) in _STRATEGIES.items():
+    PLACEMENTS.register(_name, PlacementStrategy(_name, _matcher))
 
 
 def capability_weights(fogs: Sequence[FogSpec], g: Graph,

@@ -19,7 +19,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.placement import FogSpec, Placement, iep_place
+from repro.api.registry import PLACEMENTS
+from repro.core.placement import FogSpec, Placement
 from repro.core.profiler import cardinality_of
 from repro.gnn.graph import Graph
 
@@ -98,8 +99,16 @@ def schedule_step(g: Graph, state: SchedulerState, fogs: Sequence[FogSpec],
                   t_real: np.ndarray, *, lam: float = 1.3,
                   theta: float = 0.5, bytes_per_vertex: Optional[float] = None,
                   k_layers: int = 2, sync_cost: float = 5e-3,
-                  seed: int = 0) -> SchedulerState:
-    """One Alg. 2 invocation: update timings -> skew check -> dual-mode."""
+                  seed: int = 0,
+                  replan_strategy: str = "iep",
+                  replan_partitioner=None) -> SchedulerState:
+    """One Alg. 2 invocation: update timings -> skew check -> dual-mode.
+
+    ``replan_strategy`` names a PLACEMENTS registry entry used for the
+    global re-plan branch (the paper uses IEP; baselines are pluggable);
+    ``replan_partitioner`` overrides the BGP solver the re-plan uses, so a
+    plan compiled with a custom partitioner keeps it across re-plans.
+    """
     t_real = np.asarray(t_real, np.float64)
     # Step 1: update performance estimates (online profiler eta per node).
     for j, f in enumerate(fogs):
@@ -120,9 +129,9 @@ def schedule_step(g: Graph, state: SchedulerState, fogs: Sequence[FogSpec],
         state.migrations += moved
         state.mode_history.append(f"diffusion({moved})")
     else:
-        state.placement = iep_place(
+        state.placement = PLACEMENTS.resolve(replan_strategy).place(
             g, fogs, bytes_per_vertex=bytes_per_vertex, k_layers=k_layers,
-            sync_cost=sync_cost, seed=seed, strategy="iep")
+            sync_cost=sync_cost, seed=seed, partitioner=replan_partitioner)
         state.replans += 1
         state.mode_history.append("replan")
     return state

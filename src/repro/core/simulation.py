@@ -178,6 +178,11 @@ def make_cluster(spec: str, network: str, graph: Graph, *, hidden: int = 64,
 # Serving pipelines (latency + throughput accounting)
 # ----------------------------------------------------------------------------
 
+def _norm_compress(compress: Optional[str]) -> Optional[str]:
+    """The registry's explicit "none" key means the same as None here."""
+    return None if compress in (None, "none") else compress
+
+
 def _partition_wire_bytes(g: Graph, vertex_ids: np.ndarray,
                           compress: Optional[str]) -> float:
     overhead = len(vertex_ids) * PROTOCOL_BYTES_PER_VERTEX
@@ -216,6 +221,7 @@ class ServingResult:
 def simulate_cloud(cluster: FogCluster, *, compress: Optional[str] = None,
                    congestion: float = 1.0) -> ServingResult:
     """De-facto cloud serving: full upload over WAN, fast datacenter GPU."""
+    compress = _norm_compress(compress)
     g = cluster.graph
     wan = NETWORKS[cluster.network]["wan"]
     all_v = np.arange(g.num_vertices)
@@ -236,6 +242,7 @@ def simulate_cloud(cluster: FogCluster, *, compress: Optional[str] = None,
 def simulate_single_fog(cluster: FogCluster, *,
                         compress: Optional[str] = None) -> ServingResult:
     """Single most-powerful fog node executes everything (paper §II-C)."""
+    compress = _norm_compress(compress)
     g = cluster.graph
     lan = NETWORKS[cluster.network]["lan"]
     best = max(cluster.nodes, key=lambda nd: nd.effective_capability)
@@ -258,6 +265,7 @@ def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
     pipelined on a separate thread (§III-D) and overlaps execution, so only
     its non-overlapped remainder counts.
     """
+    compress = _norm_compress(compress)
     g = cluster.graph
     n = len(cluster.nodes)
     collect = np.zeros(n)
@@ -283,6 +291,27 @@ def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
     throughput = 1.0 / max(collect.max(), exec_t.max())
     return ServingResult(collect, exec_t, unpack, total, throughput,
                          wire_total)
+
+
+def simulate(pipeline: str, cluster: FogCluster,
+             placement: Optional[Placement] = None, *,
+             compress: Optional[str] = None) -> ServingResult:
+    """Dispatch the latency accounting for one serving pipeline.
+
+    ``pipeline``: "cloud", "single" (most powerful fog) or "multi"
+    (distributed BSP under ``placement``). Executor backends resolve their
+    accounting through this single entry point.
+    """
+    if pipeline == "cloud":
+        return simulate_cloud(cluster, compress=compress)
+    if pipeline == "single":
+        return simulate_single_fog(cluster, compress=compress)
+    if pipeline == "multi":
+        if placement is None:
+            raise ValueError("pipeline 'multi' needs a placement")
+        return simulate_multi_fog(cluster, placement, compress=compress)
+    raise ValueError(f"unknown pipeline {pipeline!r}; "
+                     "available: cloud, multi, single")
 
 
 def apply_load_trace(cluster: FogCluster, loads: Sequence[float]) -> None:

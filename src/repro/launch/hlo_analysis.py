@@ -167,8 +167,10 @@ def computation_multipliers(comps: Dict[str, Computation],
 
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
     result_elems, _ = _shape_elems_bytes(op.shape_text)
-    # lhs operand: first %name inside parens.
-    mo = re.match(r"\s*%([\w.\-]+)", op.rest)
+    # lhs operand: first %name inside parens. Operands may be printed bare
+    # ("dot(%a, %b)") or typed ("dot(f32[32,64]{1,0} %a, ...)"), so search
+    # for the first reference rather than anchoring at the paren.
+    mo = re.search(r"%([\w.\-]+)", op.rest)
     if not mo:
         return 0.0
     lhs_shape = shapes.get(mo.group(1), "")

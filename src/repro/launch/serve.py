@@ -7,8 +7,10 @@ The paper's technique generalized to the transformer substrate (DESIGN.md
   * each pod is profiled with the paper's proxy-guided profiler (latency
     ~ beta . <batch, total_cache_tokens> + eps — the transformer analogue
     of omega(<|V|, |N_V|>)),
-  * request batches are matched to heterogeneous pods with the LBAP
-    bottleneck solver (min-max completion = Eq. 7),
+  * request batches are matched to heterogeneous pods through the same
+    PLACEMENTS registry the GNN fog path uses — "iep" resolves to the LBAP
+    bottleneck solver (min-max completion = Eq. 7); "metis+greedy" and
+    "random" give the paper's baselines via ``--placement``,
   * the dual-mode load indicators decide when to re-plan.
 
 Runs a REAL decode loop (reduced config on CPU; full config on a TPU mesh)
@@ -28,8 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.placement import PLACEMENTS  # import registers strategies
 from repro.configs import registry
-from repro.core.placement import lbap
 from repro.core.profiler import LatencyModel, fit_latency_model
 from repro.models import transformer as tf
 
@@ -65,8 +67,12 @@ def profile_pods(pods: List[Pod], base_step_s: float):
         p.model = fit_latency_model(cards, all_lat[p.name])
 
 
-def place_batches(batches, pods):
-    """LBAP bottleneck matching of request batches to pods (Eq. 7/8)."""
+def place_batches(batches, pods, placement: str = "iep", seed: int = 0):
+    """Batch->pod matching via a PLACEMENTS registry strategy (Eq. 7/8).
+
+    The default "iep" resolves to the exact LBAP bottleneck solver; any
+    registered strategy key works (thin adapter over the fog pipeline).
+    """
     n = max(len(batches), len(pods))
     cost = np.zeros((n, n))
     for k in range(n):
@@ -77,7 +83,7 @@ def place_batches(batches, pods):
                 b = batches[k]
                 cache = sum(len(r.prompt) + r.max_new for r in b)
                 cost[k, j] = pods[j].model.predict((len(b), cache))
-    return lbap(cost)
+    return PLACEMENTS.resolve(placement).match(cost, seed=seed)
 
 
 def main(argv=None):
@@ -90,6 +96,9 @@ def main(argv=None):
     ap.add_argument("--pods", default="1.0,1.6,2.4",
                     help="comma-separated pod speed factors")
     ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--placement", default="iep",
+                    help="PLACEMENTS registry key for batch->pod matching "
+                         f"(available: {', '.join(PLACEMENTS.keys())})")
     args = ap.parse_args(argv)
 
     cfg = registry.get(args.arch)
@@ -123,7 +132,8 @@ def main(argv=None):
     sim_pod_busy = np.zeros(len(pods))
     while batches:
         take = batches[:len(pods)]
-        mapping = place_batches(take, pods)
+        mapping = place_batches(take, pods, placement=args.placement,
+                                seed=round_idx)
         for k, batch in enumerate(take):
             j = int(mapping[k]) if int(mapping[k]) < len(pods) else 0
             pod = pods[j]

@@ -29,6 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exports shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # older releases keep it under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.api.registry import EXCHANGES
 from repro.gnn.graph import Graph
 from repro.gnn.layers import EdgeList, LAYER_FNS
 
@@ -195,7 +201,7 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
 
     spec = P(axis, None, None)
     spec2 = P(axis, None)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_shard_map(
         shard_fn, mesh=mesh,
         in_specs=(spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
                   spec2, spec2),
@@ -235,3 +241,17 @@ def exchange_bytes(pg: PartitionedGraph, feature_dim: int,
     if exchange == "allgather":
         return pg.n * pg.slots * feature_dim * dtype_bytes
     return pg.n * pg.boundary_slots * feature_dim * dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """An EXCHANGES registry entry: one per-layer cross-fog exchange."""
+    name: str
+
+    def bytes_per_sync(self, pg: PartitionedGraph, feature_dim: int,
+                       dtype_bytes: int = 4) -> int:
+        return exchange_bytes(pg, feature_dim, self.name, dtype_bytes)
+
+
+EXCHANGES.register("halo", ExchangeSpec("halo"))
+EXCHANGES.register("allgather", ExchangeSpec("allgather"))

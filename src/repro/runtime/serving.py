@@ -1,117 +1,132 @@
-"""Fograph end-to-end serving pipeline (paper Fig. 5/6 workflow).
+"""Deprecated Fograph serving entry points (pre-Engine API).
 
-Glues every module along the paper's five steps:
+.. deprecated::
+   ``deploy`` / ``serve_query`` / ``adapt`` are thin shims over the unified
+   ``repro.api`` Engine/Plan/Session pipeline and will be removed in a
+   future PR. New code should use::
 
-  1. metadata registration  — profile fog nodes, register models (setup)
-  2. execution planning      — IEP data placement
-  3. compressed collection   — DAQ + lossless packing of device uploads
-  4. distributed runtime     — BSP inference over the fog mesh axis
-  5. adaptive scheduling     — dual-mode placement refinement across queries
+       from repro.api import Engine
+       plan = Engine((params, kind), cluster="1A+4B+1C",
+                     compressor="daq").compile(graph)
+       session = plan.session()
+       result = session.query()          # serving
+       session.adapt()                   # adaptive-scheduler tick
 
-Latency accounting comes from `core.simulation` (the container has no real
-LAN); *numerical results* come from real JAX execution — the embeddings a
-query returns are genuinely computed with the (de)quantized features, so
-accuracy experiments measure true quantization effects.
+   See docs/api.md for the full migration table.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Optional
 
-import numpy as np
+from repro.api.plan import Plan
+from repro.api.session import QueryResult, Session
+from repro.core import simulation
 
-from repro.core import compression, simulation
-from repro.core.placement import FogSpec, Placement, iep_place
-from repro.core.scheduler import SchedulerState, schedule_step
-from repro.gnn.graph import Graph
-from repro.gnn.layers import EdgeList
-from repro.gnn.models import gnn_apply
+__all__ = ["FographService", "QueryResult", "deploy", "serve_query", "adapt"]
 
 
-@dataclasses.dataclass
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.runtime.serving.{old} is deprecated; use {new} "
+        "(see docs/api.md)", DeprecationWarning, stacklevel=3)
+
+
 class FographService:
-    """A deployed Fograph service instance (one GNN model, one fog cluster)."""
-    cluster: simulation.FogCluster
-    fogs: List[FogSpec]
-    params: list
-    kind: str
-    placement: Placement
-    compress: Optional[str] = "daq"
-    exchange: str = "halo"
-    state: SchedulerState = None
+    """Legacy service handle — now a thin view over an api.Session.
 
-    def __post_init__(self):
-        if self.state is None:
-            self.state = SchedulerState(placement=self.placement)
+    Keeps the old attribute surface (``cluster``, ``fogs``, ``params``,
+    ``kind``, ``placement``, ``state``, ``compress``, ``exchange``) so
+    existing call sites keep working while they migrate. The knobs the old
+    dataclass let callers reassign between queries (``compress``,
+    ``exchange``, ``state``) stay writable and take effect on the next
+    ``serve_query``; ``params``/``kind`` are frozen into the compiled plan
+    (re-``deploy`` to change the model).
+    """
+
+    def __init__(self, session: Session):
+        self.session = session
+
+    @property
+    def plan(self) -> Plan:
+        return self.session.plan
+
+    @property
+    def cluster(self) -> simulation.FogCluster:
+        return self.session.plan.cluster
+
+    @property
+    def fogs(self):
+        return self.session.fogs
+
+    @property
+    def params(self):
+        return list(self.session.plan.model.params)
+
+    @property
+    def kind(self) -> str:
+        return self.session.plan.model.kind
+
+    @property
+    def placement(self):
+        return self.session.placement
+
+    @property
+    def state(self):
+        return self.session.state
+
+    @state.setter
+    def state(self, value) -> None:
+        self.session.state = value
+        self.session._partitioned = None  # layout may have changed
+
+    @property
+    def compress(self) -> Optional[str]:
+        key = self.session._compressor.name
+        return None if key == "none" else key
+
+    @compress.setter
+    def compress(self, key: Optional[str]) -> None:
+        from repro.api.registry import COMPRESSORS
+        self.session._compressor = COMPRESSORS.resolve(
+            "none" if key is None else key)
+
+    @property
+    def exchange(self) -> str:
+        return self.session._exchange.name
+
+    @exchange.setter
+    def exchange(self, key: str) -> None:
+        from repro.api.registry import EXCHANGES
+        self.session._exchange = EXCHANGES.resolve(key)
 
 
-def deploy(graph: Graph, params, kind: str, *, cluster_spec: str = "1A+4B+1C",
+def deploy(graph, params, kind: str, *, cluster_spec: str = "1A+4B+1C",
            network: str = "wifi", hidden: int = 64, seed: int = 0,
            compress: Optional[str] = "daq", strategy: str = "iep",
            exchange: str = "halo",
            sync_cost: float = simulation.DEFAULT_SYNC_COST) -> FographService:
-    """Setup phase: profile, register metadata, plan placement."""
-    k_layers = len(params)
-    cluster = simulation.make_cluster(cluster_spec, network, graph,
-                                      hidden=hidden, k_layers=k_layers,
-                                      seed=seed, sync_cost=sync_cost)
-    fogs = cluster.fog_specs(seed=seed)
-    placement = iep_place(graph, fogs, k_layers=k_layers,
-                          sync_cost=sync_cost, seed=seed, strategy=strategy)
-    return FographService(cluster=cluster, fogs=fogs, params=params,
-                          kind=kind, placement=placement, compress=compress,
-                          exchange=exchange)
+    """Deprecated: use ``repro.api.Engine(...).compile(graph).session()``."""
+    from repro.api.engine import Engine
+    _deprecated("deploy", "repro.api.Engine(...).compile(graph).session()")
+    engine = Engine((params, kind), cluster=cluster_spec, network=network,
+                    placement=strategy,  # registry resolves legacy aliases
+                    compressor="none" if compress is None else compress,
+                    exchange=exchange, executor="sim", hidden=hidden,
+                    seed=seed, sync_cost=sync_cost)
+    return FographService(engine.compile(graph).session())
 
 
-@dataclasses.dataclass
-class QueryResult:
-    embeddings: np.ndarray
-    latency: float
-    throughput: float
-    breakdown: Dict[str, float]
-    wire_bytes: float
-
-
-def serve_query(svc: FographService, *, distributed: bool = False) -> QueryResult:
-    """Runtime phase for one inference query.
-
-    The numerical path packs/unpacks features exactly as devices/fogs would
-    (so quantization error is real); the distributed path additionally runs
-    the BSP shard_map runtime when enough JAX devices exist, else the
-    single-program equivalent (verified identical in tests).
-    """
-    g = svc.cluster.graph
-    # --- step 3: compressed collection (real pack/unpack round-trip) ---
-    if svc.compress == "daq":
-        packed = compression.daq_pack(g.features.astype(np.float64), g.degrees)
-        feats = compression.daq_unpack(packed).astype(np.float32)
-    elif svc.compress == "uniform8":
-        packed = compression.uniform_pack(g.features.astype(np.float64), 8)
-        feats = compression.daq_unpack(packed).astype(np.float32)
-    else:
-        feats = g.features
-    # --- step 4: distributed runtime (numerics) ---
-    if distributed:
-        from repro.runtime.bsp import bsp_infer
-        g2 = dataclasses.replace(g, features=feats)
-        emb = bsp_infer(svc.params, svc.kind, g2,
-                        svc.state.placement.assignment, exchange=svc.exchange)
-    else:
-        emb = np.asarray(gnn_apply(svc.params, svc.kind, feats,
-                                   EdgeList.from_graph(g)))
-    # --- latency accounting (simulated cluster) ---
-    res = simulation.simulate_multi_fog(svc.cluster, svc.state.placement,
-                                        compress=svc.compress)
-    return QueryResult(embeddings=emb, latency=res.total_latency,
-                       throughput=res.throughput, breakdown=res.breakdown(),
-                       wire_bytes=res.wire_bytes)
+def serve_query(svc: FographService, *,
+                distributed: bool = False) -> QueryResult:
+    """Deprecated: use ``Session.query()`` (``executor="mesh-bsp"`` for the
+    real-mesh path the old ``distributed=True`` flag selected)."""
+    _deprecated("serve_query", "Session.query()")
+    return svc.session.query(executor="mesh-bsp" if distributed else None)
 
 
 def adapt(svc: FographService, *, lam: float = 1.3, theta: float = 0.5,
           seed: int = 0) -> str:
-    """Step 5: one adaptive-scheduler tick using current measured times."""
-    t_real = simulation.measured_exec_times(svc.cluster, svc.state.placement)
-    svc.state = schedule_step(svc.cluster.graph, svc.state, svc.fogs, t_real,
-                              lam=lam, theta=theta,
-                              sync_cost=svc.cluster.sync_cost, seed=seed)
-    return svc.state.mode_history[-1]
+    """Deprecated: use ``Session.adapt()``."""
+    _deprecated("adapt", "Session.adapt()")
+    return svc.session.adapt(lam=lam, theta=theta, seed=seed)

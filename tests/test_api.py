@@ -1,0 +1,266 @@
+"""Engine/Plan/Session API: registries, immutability, backend equality,
+deprecated serving shims."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (COMPRESSORS, EXCHANGES, EXECUTORS, PARTITIONERS,
+                       PLACEMENTS, Engine, ModelSpec, UnknownComponentError)
+from repro.gnn import datasets, models
+from repro.runtime import serving
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("siot", scale=0.08, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 32, 8])
+    return g, params
+
+
+# ----------------------------------------------------------------------------
+# Registries
+# ----------------------------------------------------------------------------
+
+def test_registries_have_expected_keys():
+    assert "bgp" in PARTITIONERS
+    assert {"iep", "metis+greedy", "random"} <= set(PLACEMENTS.keys())
+    assert {"daq", "uniform8", "none"} <= set(COMPRESSORS.keys())
+    assert set(EXCHANGES.keys()) == {"allgather", "halo"}
+    assert {"sim", "single", "mesh-bsp"} <= set(EXECUTORS.keys())
+
+
+def test_unknown_key_error_lists_available(setup):
+    g, params = setup
+    with pytest.raises(UnknownComponentError) as ei:
+        Engine((params, "gcn"), compressor="zstd")
+    msg = str(ei.value)
+    assert "zstd" in msg and "daq" in msg and "none" in msg
+    with pytest.raises(UnknownComponentError, match="sim"):
+        Engine((params, "gcn"), executor="tpu-pod")
+    with pytest.raises(UnknownComponentError, match="iep"):
+        Engine((params, "gcn"), placement="round-robin")
+
+
+def test_registry_aliases_and_passthrough(setup):
+    g, params = setup
+    assert PLACEMENTS.resolve("greedy") is PLACEMENTS.resolve("metis+greedy")
+    assert COMPRESSORS.resolve(None) is None          # non-str passes through
+    eng = Engine((params, "gcn"), compressor=None)    # None -> "none"
+    assert eng.config.compressor == "none"
+
+
+def test_model_spec_validation(setup):
+    g, params = setup
+    with pytest.raises(ValueError, match="gcn"):
+        ModelSpec(params=tuple(params), kind="transformer")
+    with pytest.raises(TypeError):
+        Engine(object())
+    # both (params, kind) and (kind, params) coerce
+    assert Engine((params, "gcn")).model.kind == "gcn"
+    assert Engine(("gcn", params)).model.kind == "gcn"
+
+
+# ----------------------------------------------------------------------------
+# Plan immutability
+# ----------------------------------------------------------------------------
+
+def test_plan_frozen_and_stable_across_session(setup):
+    g, params = setup
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C").compile(g)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.placement = None
+    before = plan.placement.assignment.copy()
+    session = plan.session()
+    session.query()
+    # overload a node so adaptation actually migrates vertices
+    t = [plan.cluster.ground_truth_exec(n, np.flatnonzero(
+        session.placement.assignment == j))
+        for j, n in enumerate(plan.cluster.nodes)]
+    plan.cluster.nodes[int(np.argmax(t))].background_load = 4.0
+    mode = session.adapt(lam=1.1)
+    assert mode != "none"
+    assert not np.array_equal(before, session.placement.assignment)
+    assert np.array_equal(before, plan.placement.assignment)
+    # a second session starts from the pristine plan, not the adapted one
+    assert np.array_equal(before, plan.session().placement.assignment)
+    plan.cluster.nodes[int(np.argmax(t))].background_load = 0.0
+
+
+def test_sessions_do_not_share_latency_model_state(setup):
+    """adapt() updates the online eta on session-owned copies, never on the
+    plan's profiled FogSpecs (sibling sessions stay uncontaminated)."""
+    g, params = setup
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C").compile(g)
+    s1 = plan.session()
+    plan.cluster.nodes[0].background_load = 5.0
+    s1.adapt(lam=1.05)
+    assert any(f.latency_model.load_factor != 1.0 for f in s1.fogs)
+    assert all(f.latency_model.load_factor == 1.0 for f in plan.fogs)
+    assert all(f.latency_model.load_factor == 1.0
+               for f in plan.session().fogs)
+    plan.cluster.nodes[0].background_load = 0.0
+
+
+def test_shim_knobs_stay_writable(setup):
+    """The old dataclass allowed reassigning compress/exchange between
+    queries; the shim must honor that on the next serve_query."""
+    g, params = setup
+    with pytest.warns(DeprecationWarning):
+        svc = serving.deploy(g, params, "gcn", cluster_spec="1A+2B+1C",
+                             compress="daq")
+    with pytest.warns(DeprecationWarning):
+        wire_daq = serving.serve_query(svc).wire_bytes
+    svc.compress = None
+    assert svc.compress is None
+    with pytest.warns(DeprecationWarning):
+        wire_raw = serving.serve_query(svc).wire_bytes
+    assert wire_raw > 2 * wire_daq
+    svc.exchange = "allgather"
+    assert svc.exchange == "allgather"
+
+
+def test_stream_and_adapt_every(setup):
+    g, params = setup
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C").compile(g)
+    session = plan.session(adapt_every=2, lam=1.5)
+    results = list(session.stream(4))
+    assert len(results) == 4
+    assert session.num_queries == 4
+    assert len(session.state.mode_history) == 2  # ticked at queries 2 and 4
+    # stream also accepts an iterable of feature overrides
+    noisy = g.features + 0.01
+    r = list(plan.session().stream([None, noisy]))
+    assert len(r) == 2 and not np.allclose(r[0].embeddings, r[1].embeddings)
+
+
+# ----------------------------------------------------------------------------
+# Executor backends
+# ----------------------------------------------------------------------------
+
+def test_sim_and_single_numerically_equal(setup):
+    g, params = setup
+    base = dict(cluster="1A+2B+1C", compressor="daq")
+    r_sim = Engine((params, "gcn"), executor="sim",
+                   **base).compile(g).session().query()
+    r_single = Engine((params, "gcn"), executor="single",
+                      **base).compile(g).session().query()
+    np.testing.assert_allclose(r_sim.embeddings, r_single.embeddings,
+                               rtol=1e-6, atol=1e-6)
+    assert r_sim.backend == "sim" and r_single.backend == "single"
+    # unified metrics schema across backends
+    for r in (r_sim, r_single):
+        assert {"collect", "execute", "unpack", "total"} <= set(r.breakdown)
+        assert r.latency > 0 and r.throughput > 0 and r.wire_bytes > 0
+    assert r_sim.exchange_bytes > 0        # BSP sync payload
+    assert r_single.exchange_bytes == 0    # no cross-fog sync
+
+
+def test_compressor_swap_changes_wire_not_agreement(setup):
+    g, params = setup
+    base = dict(cluster="1A+2B+1C")
+    r_raw = Engine((params, "gcn"), compressor="none",
+                   **base).compile(g).session().query()
+    r_daq = Engine((params, "gcn"), compressor="daq",
+                   **base).compile(g).session().query()
+    assert r_daq.wire_bytes < 0.5 * r_raw.wire_bytes
+    agree = np.mean(r_raw.embeddings.argmax(-1) == r_daq.embeddings.argmax(-1))
+    assert agree > 0.97
+
+
+def test_mesh_bsp_device_check_is_helpful(setup):
+    g, params = setup
+    plan = Engine((params, "gcn"), cluster="1A+4B+1C",
+                  executor="mesh-bsp").compile(g)
+    if len(jax.devices()) >= plan.num_fogs:
+        pytest.skip("enough devices present; check cannot trip")
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        plan.session()
+
+
+def test_mesh_bsp_backend_switch_subprocess():
+    """Same Engine config, executor sim vs mesh-bsp: identical numerics."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.api import Engine
+        from repro.gnn import datasets, models
+        g = datasets.load('yelp', scale=0.06, seed=3)
+        params = models.gnn_init(jax.random.PRNGKey(0), 'sage',
+                                 [g.feature_dim, 16, 8])
+        base = dict(cluster='4B', compressor='daq')
+        ref = Engine((params, 'sage'), executor='sim',
+                     **base).compile(g).session().query()
+        for ex in ('allgather', 'halo'):
+            r = Engine((params, 'sage'), executor='mesh-bsp', exchange=ex,
+                       **base).compile(g).session().query()
+            err = float(np.abs(r.embeddings - ref.embeddings).max())
+            assert err < 5e-4, (ex, err)
+            assert r.backend == 'mesh-bsp'
+            assert r.exchange_bytes > 0
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+# ----------------------------------------------------------------------------
+# Deprecated serving shims
+# ----------------------------------------------------------------------------
+
+def test_deploy_serve_query_adapt_shims(setup):
+    g, params = setup
+    with pytest.warns(DeprecationWarning):
+        svc = serving.deploy(g, params, "gcn", cluster_spec="1A+2B+1C",
+                             compress="daq")
+    assert isinstance(svc, serving.FographService)
+    # legacy attribute surface
+    assert svc.kind == "gcn" and svc.compress == "daq"
+    assert svc.placement.assignment.shape == (g.num_vertices,)
+    assert len(svc.fogs) == len(svc.cluster.nodes) == 4
+    with pytest.warns(DeprecationWarning):
+        r = serving.serve_query(svc)
+    assert r.embeddings.shape == (g.num_vertices, 8)
+    assert r.latency > 0 and r.throughput > 0
+    # shim result equals a direct session query on the same config
+    direct = Engine((params, "gcn"), cluster="1A+2B+1C",
+                    compressor="daq").compile(g).session().query()
+    np.testing.assert_allclose(r.embeddings, direct.embeddings,
+                               rtol=1e-6, atol=1e-6)
+    assert r.latency == pytest.approx(direct.latency)
+    with pytest.warns(DeprecationWarning):
+        mode = serving.adapt(svc)
+    assert mode in ("none",) or mode.startswith(("diffusion", "replan"))
+
+
+def test_pod_matching_uses_placement_registry():
+    """launch.serve's batch matcher is a thin adapter over PLACEMENTS."""
+    from repro.core.profiler import LatencyModel
+    from repro.launch.serve import Pod, place_batches
+
+    class R:  # minimal request stub
+        prompt = np.zeros(8, np.int32)
+        max_new = 16
+
+    pods = [Pod(f"p{i}", s, model=LatencyModel(
+        beta=np.array([1e-3 / s, 1e-5 / s]), eps=1e-4))
+        for i, s in enumerate((1.0, 2.0, 4.0))]
+    batches = [[R()] * b for b in (4, 2, 1)]
+    mapping = place_batches(batches, pods, placement="iep")
+    assert sorted(mapping) == [0, 1, 2]
+    # bottleneck property: biggest batch lands on the fastest pod
+    assert mapping[0] == 2
+    with pytest.raises(UnknownComponentError):
+        place_batches(batches, pods, placement="nope")

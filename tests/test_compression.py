@@ -1,7 +1,8 @@
 """DAQ + lossless compression: Thm 2 exactness, round-trip error bounds."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep:
+# property tests skip cleanly when hypothesis is not installed
 
 from repro.core import compression as comp
 from repro.gnn import datasets

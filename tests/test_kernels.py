@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep:
+# property tests skip cleanly when hypothesis is not installed
 
 from repro.gnn import datasets
 from repro.kernels import ops, ref

@@ -3,7 +3,8 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep:
+# property tests skip cleanly when hypothesis is not installed
 
 from repro.core import placement, simulation
 from repro.core.placement import (FogSpec, hungarian, iep_place, lbap,
