@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification: full test suite from a clean checkout.
 # pyproject.toml's [tool.pytest.ini_options] pythonpath handles src/, so no
-# PYTHONPATH incantation is needed.
+# PYTHONPATH incantation is needed for pytest itself.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+python -m compileall -q src
 python -m pytest -x -q "$@"
+# Keep the throughput benchmark entry point from rotting: tiny sweep with a
+# built-in pass/fail guard (pipelined server must beat the serial loop).
+PYTHONPATH=src python benchmarks/throughput.py --smoke

@@ -18,6 +18,10 @@ _LAZY = {
     "Session": "repro.api.session",
     "QueryResult": "repro.api.session",
     "ExecutorBackend": "repro.api.executors",
+    "Server": "repro.api.server",
+    "Request": "repro.api.server",
+    "Response": "repro.api.server",
+    "traces": "repro.api.traces",   # submodule: resolves to the module
 }
 
 __all__ = sorted(["Registry", "UnknownComponentError", "ALL_REGISTRIES",
@@ -28,7 +32,10 @@ __all__ = sorted(["Registry", "UnknownComponentError", "ALL_REGISTRIES",
 def __getattr__(name):
     if name in _LAZY:
         import importlib
-        return getattr(importlib.import_module(_LAZY[name]), name)
+        module = importlib.import_module(_LAZY[name])
+        if _LAZY[name].rsplit(".", 1)[-1] == name:
+            return module   # submodule entry (e.g. traces)
+        return getattr(module, name)
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
 
 

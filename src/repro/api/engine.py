@@ -1,16 +1,16 @@
 """Engine: the single front door to the Fograph serving pipeline.
 
     Engine(model, cluster, **knobs).compile(graph) -> Plan
-    Plan.session() -> Session
-    Session.query() / Session.stream(...) -> QueryResult(s)
+    Plan.session() -> Session -> Session.query() -> QueryResult
+    Plan.server() -> Server -> Server.replay(trace) -> [Response, ...]
 
 ``Engine`` captures the pipeline *configuration* (every stage is a
 string-keyed registry entry); ``compile`` runs the paper's setup phase once
 — fog profiling/metadata registration, IEP data placement, static-shape
 partition buffers — and freezes the result into an immutable ``Plan``.
-Swapping the executor backend between "sim", "single" and "mesh-bsp" (or
-the compressor/exchange/placement between their registry keys) changes no
-other code.
+Swapping the executor backend between "sim", "single", "mesh-bsp" and
+"cloud" (or the compressor/exchange/placement between their registry
+keys) changes no other code.
 """
 from __future__ import annotations
 

@@ -12,10 +12,14 @@ out and which simulated pipeline prices its latency:
   "mesh-bsp"  shard_map over a real JAX device mesh, one device per fog
               partition, halo/allgather collectives per layer (§III-E);
               multi-fog accounting.
+  "cloud"     single-program numerics, de-facto cloud accounting (full
+              WAN upload to a datacenter GPU) — the paper's Fig. 3
+              cloud-vs-fog baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import List, Sequence
 
 import jax
 import numpy as np
@@ -31,8 +35,8 @@ class ExecutorBackend:
     """Base entry for the EXECUTORS registry.
 
     ``pipeline`` names the ``simulation.simulate`` accounting pipeline
-    ("multi" or "single"); ``run`` returns [V, D] embeddings in original
-    vertex order.
+    ("multi", "single" or "cloud"); ``run`` returns [V, D] embeddings in
+    original vertex order.
     """
     name: str
     pipeline: str
@@ -43,6 +47,19 @@ class ExecutorBackend:
     def run(self, plan, feats: np.ndarray, assignment: np.ndarray,
             pg: bsp.PartitionedGraph, exchange: str) -> np.ndarray:
         raise NotImplementedError
+
+    def run_many(self, plan, feats_list: Sequence[np.ndarray],
+                 assignment: np.ndarray, pg: bsp.PartitionedGraph,
+                 exchange: str) -> List[np.ndarray]:
+        """One executor run over a micro-batch of feature sets.
+
+        The default serves each set through ``run`` back-to-back, which
+        keeps batched numerics bit-identical to serial queries (the
+        batching win is priced by ``simulation.simulate(batch_size=B)``);
+        backends with a natively batched layout may override.
+        """
+        return [self.run(plan, f, assignment, pg, exchange)
+                for f in feats_list]
 
 
 class _SingleProgram(ExecutorBackend):
@@ -71,3 +88,4 @@ class _MeshBsp(ExecutorBackend):
 EXECUTORS.register("sim", _SingleProgram("sim", "multi"))
 EXECUTORS.register("single", _SingleProgram("single", "single"))
 EXECUTORS.register("mesh-bsp", _MeshBsp("mesh-bsp", "multi"))
+EXECUTORS.register("cloud", _SingleProgram("cloud", "cloud"))

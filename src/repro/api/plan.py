@@ -97,6 +97,15 @@ class Plan:
         from repro.api.session import Session
         return Session(self, **kw)
 
+    def server(self, *, max_batch: int = 8, max_wait: float = 0.0,
+               pipelined: bool = True, **session_kw) -> "Server":
+        """Open a request-level server (micro-batching + pipelined
+        collect/execute) over a fresh session; extra kwargs go to
+        ``session()``."""
+        from repro.api.server import Server
+        return Server(self.session(**session_kw), max_batch=max_batch,
+                      max_wait=max_wait, pipelined=pipelined)
+
     def describe(self) -> dict:
         """Plain-dict summary (for logs / dashboards)."""
         return {

@@ -24,15 +24,21 @@ from typing import Any, Callable, Dict, Iterator, Optional
 
 
 class UnknownComponentError(KeyError):
-    """Raised when a registry key does not resolve; message lists options."""
+    """Raised when a registry key does not resolve; message lists the
+    registry's name, every available key, and a close-match suggestion."""
 
-    def __init__(self, kind: str, key: str, available):
+    def __init__(self, kind: str, key: str, available, aliases=()):
         self.kind = kind
         self.key = key
         self.available = tuple(sorted(available))
-        super().__init__(
-            f"unknown {kind} {key!r}; available: "
-            f"{', '.join(self.available) or '(none registered)'}")
+        msg = (f"unknown {kind} {key!r}; available: "
+               f"{', '.join(self.available) or '(none registered)'}")
+        import difflib
+        close = difflib.get_close_matches(
+            key, [*self.available, *aliases], n=1, cutoff=0.6)
+        if close:
+            msg += f" (did you mean {close[0]!r}?)"
+        super().__init__(msg)
 
     def __str__(self) -> str:  # KeyError.__str__ would repr() the message
         return self.args[0]
@@ -69,7 +75,8 @@ class Registry:
             return key
         k = self.canonical(key)
         if k not in self._entries:
-            raise UnknownComponentError(self.kind, key, self._entries)
+            raise UnknownComponentError(self.kind, key, self._entries,
+                                        aliases=self._aliases)
         return self._entries[k]
 
     def keys(self):

@@ -1,0 +1,309 @@
+"""Request-level serving front-end: ``Server`` / ``Request`` / ``Response``.
+
+``Session.query`` is a strictly blocking, one-query-at-a-time call; the
+paper's headline throughput numbers come from serving *streams* of
+queries with feature collection pipelined against execution (§III-D).
+This module adds the arrival-driven layer on top of the Session's
+separately callable stages:
+
+  * ``Request``   — one inference query: features (None = the graph's
+    stored features), a simulated-clock arrival time (None = closed loop:
+    the request is generated the moment the server can admit it, like the
+    old serial ``Session.stream``), and per-request knobs (executor
+    backend override).
+  * ``Response``  — extends ``QueryResult`` with queueing, batching and
+    pipeline-overlap timings (``queue_delay``, ``batch_size``,
+    ``collect_time`` / ``execute_time`` stage splits, ``overlap_saved``).
+  * ``Server``    — admission queue + micro-batcher + two-stage pipeline.
+    Compatible consecutive requests (same executor backend) coalesce into
+    one micro-batch: one batched feature collect (priced by
+    ``simulation.simulate(..., batch_size=B)``: coalesced long-tail, one
+    packing overhead, one K*delta sync round) and one executor run over
+    the batch. Batch k+1's collection overlaps batch k's execution
+    (``simulation.pipeline_schedule``), so the steady-state period is
+    max(collect, execute) instead of their sum.
+
+Numerics are exact: each request's embeddings are computed by the same
+compressor round-trip + executor run as ``Session.query``, so batched
+responses are bit-identical to serial ones — only the latency accounting
+knows about batching (tested in ``tests/test_server.py``).
+
+    server = plan.server(max_batch=8)
+    for r in server.replay(traces.poisson(64, rate=4.0)):
+        print(r.request_id, r.queue_delay, r.latency)
+    print(server.summarize(responses))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api.registry import EXECUTORS
+from repro.api.session import QueryResult, Session
+from repro.core import simulation
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request for the serving front-end.
+
+    ``features`` of None re-serves the graph's stored features.
+    ``arrival_time`` is on the simulated clock (seconds); None means
+    closed-loop — the request becomes ready the moment the server can
+    admit it. ``executor`` optionally overrides the session's backend for
+    this request only (requests only batch with same-backend neighbours).
+    """
+    features: Optional[np.ndarray] = None
+    arrival_time: Optional[float] = None
+    executor: Optional[str] = None
+    request_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Response(QueryResult):
+    """A ``QueryResult`` plus queueing / batching / pipeline timings.
+
+    ``latency`` is end-to-end on the simulated clock: arrival ->
+    execution finished (so it includes ``queue_delay``). Invariants
+    (tested): ``queue_delay >= 0`` and
+    ``latency >= max(collect_time, execute_time)``.
+    """
+    request_id: int = 0
+    arrival_time: float = 0.0
+    queue_delay: float = 0.0
+    service_start: float = 0.0
+    finish_time: float = 0.0
+    batch_size: int = 1
+    batch_index: int = 0
+    collect_time: float = 0.0
+    execute_time: float = 0.0
+    overlap_saved: float = 0.0
+
+
+class Server:
+    """Micro-batching, pipelining request server over one ``Session``.
+
+    Args:
+      session: the ``Session`` whose collect/execute/account stages serve
+        every request (or a ``Plan``, from which a fresh session is made).
+      max_batch: micro-batch size cap (1 disables coalescing).
+      max_wait: how long (simulated seconds) an open batch waits for more
+        compatible arrivals beyond its first request before launching.
+      pipelined: overlap batch k+1's collection with batch k's execution
+        (§III-D). False reproduces the strictly serial loop — the
+        ``Session.stream`` baseline.
+
+    The server runs on a simulated clock: collection and execution free
+    times persist across ``submit``/``drain`` calls, so one server can
+    replay an arrival trace incrementally.
+    """
+
+    def __init__(self, session: Union[Session, "object"], *,
+                 max_batch: int = 8, max_wait: float = 0.0,
+                 pipelined: bool = True):
+        if not isinstance(session, Session):   # accept a Plan for brevity
+            session = session.session()
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self.session = session
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        self.pipelined = bool(pipelined)
+        self._pending: List[Request] = []
+        self._next_id = 0
+        # (collect_free, execute_free, prev_execute_start) resource state
+        # for simulation.pipeline_schedule, threaded batch-by-batch so the
+        # overlap model lives in one place and the simulated clock
+        # persists across drain() calls.
+        self._pipe_state = (0.0, 0.0, 0.0)
+        self.num_batches = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, request: Union[Request, np.ndarray, None] = None, *,
+               arrival_time: Optional[float] = None,
+               executor: Optional[str] = None) -> Request:
+        """Admit one request (a ``Request``, a feature array, or None)."""
+        if not isinstance(request, Request):
+            request = Request(features=request, arrival_time=arrival_time,
+                              executor=executor)
+        if isinstance(request.executor, str):
+            EXECUTORS.resolve(request.executor)   # reject bad keys at admission
+        if request.request_id is None:
+            request = dataclasses.replace(request, request_id=self._next_id)
+        self._next_id = max(self._next_id, request.request_id) + 1
+        self._pending.append(request)
+        return request
+
+    def _exec_key(self, req: Request) -> str:
+        key = req.executor
+        if key is None:
+            key = self.session._executor_key
+        if not isinstance(key, str):
+            key = getattr(key, "name", key)
+        return EXECUTORS.canonical(key)
+
+    # -- serving ------------------------------------------------------------
+
+    def drain(self) -> List[Response]:
+        """Serve every pending request; responses in service order."""
+        reqs = self._pending
+        self._pending = []
+        # Stable order by arrival (closed-loop requests keep submission
+        # order: they are ready whenever the server is).
+        order = sorted(range(len(reqs)),
+                       key=lambda i: (reqs[i].arrival_time
+                                      if reqs[i].arrival_time is not None
+                                      else 0.0))
+        out: List[Response] = []
+        i = 0
+        try:
+            while i < len(order):
+                batch, ready = self._form_batch(reqs, order, i)
+                out.extend(self._serve_batch([reqs[k] for k in batch],
+                                             ready))
+                i += len(batch)
+        except BaseException:
+            # Don't lose work on a mid-drain failure (bad executor key,
+            # wrong feature shape, ...): requeue everything unserved.
+            self._pending = [reqs[k] for k in order[i:]] + self._pending
+            raise
+        return out
+
+    def serve(self, requests: Iterable[Request]) -> List[Response]:
+        """Submit then drain a whole arrival trace."""
+        for r in requests:
+            self.submit(r)
+        return self.drain()
+
+    def replay(self, queries: Union[int, Iterable], *,
+               executor: Optional[str] = None) -> List[Response]:
+        """Replay a query stream: an int (closed-loop re-serves of the
+        stored features), an iterable of feature arrays (None entries use
+        stored features), or an iterable of ``Request`` objects (e.g. from
+        ``repro.api.traces``). ``executor`` overrides the backend for
+        every request that does not carry its own override.
+        """
+        if isinstance(queries, int):
+            queries = (None for _ in range(queries))
+        for q in queries:
+            if isinstance(q, Request):
+                if executor is not None and q.executor is None:
+                    q = dataclasses.replace(q, executor=executor)
+                self.submit(q)
+            else:
+                self.submit(q, executor=executor)
+        return self.drain()
+
+    # -- internals ----------------------------------------------------------
+
+    def _collect_floor(self) -> float:
+        """Earliest simulated time the next collection can start."""
+        collect_free, execute_free, _ = self._pipe_state
+        if self.pipelined:
+            return collect_free
+        return max(collect_free, execute_free)
+
+    def _form_batch(self, reqs: Sequence[Request], order: Sequence[int],
+                    start: int):
+        """Coalesce compatible consecutive requests into one micro-batch."""
+        floor = self._collect_floor()
+        first = reqs[order[start]]
+        key = self._exec_key(first)
+        first_arr = floor if first.arrival_time is None else first.arrival_time
+        open_t = max(first_arr, floor)
+        close_t = open_t + self.max_wait
+        batch = [order[start]]
+        ready = first_arr
+        for j in range(start + 1, len(order)):
+            if len(batch) >= self.max_batch:
+                break
+            r = reqs[order[j]]
+            arr = open_t if r.arrival_time is None else r.arrival_time
+            if arr > close_t or self._exec_key(r) != key:
+                break   # FIFO: an incompatible/late request closes the batch
+            batch.append(order[j])
+            ready = max(ready, arr)
+        return batch, ready
+
+    def _serve_batch(self, batch: List[Request],
+                     ready: float) -> List[Response]:
+        sess = self.session
+        b = len(batch)
+        backend = sess.resolve_executor(batch[0].executor)
+        # Accounting: one batched collect + one batched executor run.
+        res = sess.account(backend, batch_size=b)
+        c_t = float(res.collect.max())
+        e_t = res.total_latency - c_t
+        sched = simulation.pipeline_schedule(
+            [(ready, c_t, e_t)], pipelined=self.pipelined,
+            start=self._pipe_state)[-1]
+        self._pipe_state = simulation.schedule_state(sched)
+        # Numerics: per-request compressor round-trip, one run over the
+        # batch (bit-identical to serial Session.query by construction).
+        collected = [sess.collect(r.features) for r in batch]
+        embs = backend.run_many(sess.plan, collected,
+                                sess.state.placement.assignment,
+                                sess.partitioned(), sess._exchange.name)
+        xbytes = sess.exchange_bytes(backend)
+        batch_index = self.num_batches
+        self.num_batches += 1
+        out = []
+        for k, (req, emb) in enumerate(zip(batch, embs)):
+            # Closed-loop requests are generated at admission: no queueing.
+            arrival = (sched.collect_start if req.arrival_time is None
+                       else req.arrival_time)
+            queue_delay = sched.collect_start - arrival
+            latency = sched.execute_end - arrival
+            acc = None if sess.accuracy_fn is None else float(
+                sess.accuracy_fn(emb))
+            breakdown: Dict[str, float] = {
+                "queue": queue_delay, "collect": c_t, "execute": e_t,
+                "unpack": float(res.unpack.max()), "total": latency}
+            out.append(Response(
+                embeddings=emb, latency=latency, throughput=res.throughput,
+                breakdown=breakdown, wire_bytes=res.wire_bytes / b,
+                exchange_bytes=xbytes, backend=backend.name, accuracy=acc,
+                request_id=req.request_id, arrival_time=arrival,
+                queue_delay=queue_delay, service_start=sched.collect_start,
+                finish_time=sched.execute_end, batch_size=b,
+                batch_index=batch_index, collect_time=c_t, execute_time=e_t,
+                overlap_saved=sched.overlap_saved))
+            sess.tick()   # per-request adapt_every accounting (step 5)
+        return out
+
+    # -- reporting ----------------------------------------------------------
+
+    @staticmethod
+    def summarize(responses: Sequence[Response]) -> Dict[str, float]:
+        """Trace-level metrics for a batch of responses."""
+        if not responses:
+            return {"requests": 0}
+        lat = np.array([r.latency for r in responses])
+        fin = max(r.finish_time for r in responses)
+        t0 = min(r.arrival_time for r in responses)
+        makespan = fin - t0
+        return {
+            "requests": len(responses),
+            "batches": len({r.batch_index for r in responses}),
+            "mean_batch": len(responses)
+            / len({r.batch_index for r in responses}),
+            "makespan_s": makespan,
+            "throughput_rps": len(responses) / max(makespan, 1e-12),
+            "latency_mean_s": float(lat.mean()),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "queue_delay_mean_s": float(np.mean(
+                [r.queue_delay for r in responses])),
+            "overlap_saved_s": float(sum(
+                {r.batch_index: r.overlap_saved
+                 for r in responses}.values())),
+        }
+
+    def __repr__(self) -> str:
+        return (f"Server(max_batch={self.max_batch}, "
+                f"max_wait={self.max_wait}, pipelined={self.pipelined}, "
+                f"served_batches={self.num_batches})")

@@ -1,4 +1,4 @@
-"""Serving sessions: repeated/batched queries over a compiled Plan.
+"""Serving sessions: repeated queries over a compiled Plan.
 
 A ``Session`` owns every piece of mutable runtime state the old
 ``FographService`` grab-bag mixed into one dataclass:
@@ -10,17 +10,26 @@ A ``Session`` owns every piece of mutable runtime state the old
     vertices),
   * query counters for the ``adapt_every`` tick.
 
+The paper's per-query stages are separately callable — ``collect``
+(compressed feature collection, step 3), ``execute`` (distributed
+runtime, step 4) and ``account`` (simulated latency pricing) — so the
+request-level ``Server`` front-end (``repro.api.server``) can micro-batch
+and pipeline them across queries. ``query`` composes the three stages
+into the single-shot blocking call.
+
 Every query returns a ``QueryResult`` with one unified metrics schema
-across executor backends (sim / single / mesh-bsp).
+across executor backends (sim / single / mesh-bsp / cloud).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, Iterable, Iterator, Optional, Union
 
 import numpy as np
 
 from repro.api import executors as _executors  # noqa: F401  (registers backends)
+from repro.api.executors import ExecutorBackend
 from repro.api.registry import (COMPRESSORS, EXCHANGES, EXECUTORS,
                                 PARTITIONERS)
 from repro.core import simulation
@@ -35,9 +44,9 @@ class QueryResult:
 
     ``breakdown`` keys: collect / execute / unpack / total (seconds, for
     the bottleneck fog). ``exchange_bytes`` is the per-BSP-sync collective
-    payload under the plan's exchange strategy (0 for the single backend,
-    which has no cross-fog sync). ``accuracy`` is filled by the session's
-    ``accuracy_fn`` hook when one is installed.
+    payload under the plan's exchange strategy (0 for the single and cloud
+    backends, which have no cross-fog sync). ``accuracy`` is filled by the
+    session's ``accuracy_fn`` hook when one is installed.
     """
     embeddings: np.ndarray
     latency: float
@@ -97,6 +106,63 @@ class Session:
                 self.plan.graph, self.state.placement.assignment)
         return self._partitioned
 
+    # -- separately callable query stages -----------------------------------
+
+    def resolve_executor(self, executor=None) -> ExecutorBackend:
+        """Per-query backend override -> checked ExecutorBackend."""
+        if executor is None:
+            return self._executor
+        if isinstance(executor, ExecutorBackend):
+            return executor   # already resolved (and checked) upstream
+        backend = EXECUTORS.resolve(executor)
+        if backend is not self._executor:
+            backend.check(self.plan)
+        return backend
+
+    def collect(self, features: Optional[np.ndarray] = None) -> np.ndarray:
+        """Stage 1 (paper step 3): compressed collection round-trip.
+
+        ``features`` overrides the graph's stored features (fresh sensor
+        uploads); the returned array carries the codec's true quantization
+        error, exactly as the fogs would observe it after unpack.
+        """
+        g: Graph = self.plan.graph
+        raw = g.features if features is None else np.asarray(features)
+        return self._compressor.roundtrip(raw, g.degrees)
+
+    def execute(self, feats: np.ndarray, *, executor=None) -> np.ndarray:
+        """Stage 2 (paper step 4): distributed runtime (real numerics)."""
+        backend = self.resolve_executor(executor)
+        return backend.run(self.plan, feats, self.state.placement.assignment,
+                           self.partitioned(), self._exchange.name)
+
+    def account(self, executor=None, *,
+                batch_size: int = 1) -> simulation.ServingResult:
+        """Stage 3: simulated latency pricing for the current placement.
+
+        ``batch_size`` prices a micro-batch of coalesced queries (used by
+        the Server front-end; 1 = one query).
+        """
+        backend = self.resolve_executor(executor)
+        return simulation.simulate(backend.pipeline, self.plan.cluster,
+                                   self.state.placement,
+                                   compress=self._compressor.sim_key,
+                                   batch_size=batch_size)
+
+    def exchange_bytes(self, executor=None) -> int:
+        """Per-BSP-sync collective payload (0 off the multi-fog pipeline)."""
+        backend = self.resolve_executor(executor)
+        if backend.pipeline != "multi":
+            return 0
+        return self._exchange.bytes_per_sync(self.partitioned(),
+                                             self.plan.graph.feature_dim)
+
+    def tick(self) -> None:
+        """Count one served query and run the ``adapt_every`` schedule."""
+        self.num_queries += 1
+        if self.adapt_every and self.num_queries % self.adapt_every == 0:
+            self.adapt()
+
     def query(self, features: Optional[np.ndarray] = None, *,
               executor: Optional[str] = None) -> QueryResult:
         """Serve one inference query (steps 3-4 of the paper's workflow).
@@ -105,51 +171,48 @@ class Session:
         (fresh sensor uploads); ``executor`` overrides the backend for this
         query only.
         """
-        plan = self.plan
-        g: Graph = plan.graph
-        backend = (self._executor if executor is None
-                   else EXECUTORS.resolve(executor))
-        if backend is not self._executor:
-            backend.check(plan)
-        # step 3: compressed collection (real pack/unpack round-trip).
-        raw = g.features if features is None else np.asarray(features)
-        feats = self._compressor.roundtrip(raw, g.degrees)
-        # step 4: distributed runtime (real numerics).
-        emb = backend.run(plan, feats, self.state.placement.assignment,
-                          self.partitioned(), self._exchange.name)
-        # latency accounting from the simulated fog cluster.
-        res = simulation.simulate(backend.pipeline, plan.cluster,
-                                  self.state.placement,
-                                  compress=self._compressor.sim_key)
+        backend = self.resolve_executor(executor)
+        feats = self.collect(features)
+        emb = self.execute(feats, executor=backend)
+        res = self.account(backend)
         breakdown = dict(res.breakdown())
         breakdown["unpack"] = float(res.unpack.max())
-        if backend.pipeline == "multi":
-            xbytes = self._exchange.bytes_per_sync(self.partitioned(),
-                                                   g.feature_dim)
-        else:
-            xbytes = 0
+        xbytes = self.exchange_bytes(backend)
         acc = None if self.accuracy_fn is None else float(
             self.accuracy_fn(emb))
-        self.num_queries += 1
         out = QueryResult(embeddings=emb, latency=res.total_latency,
                           throughput=res.throughput, breakdown=breakdown,
                           wire_bytes=res.wire_bytes, exchange_bytes=xbytes,
                           backend=backend.name, accuracy=acc)
         # step 5: adaptive scheduling tick, owned by the session.
-        if self.adapt_every and self.num_queries % self.adapt_every == 0:
-            self.adapt()
+        self.tick()
         return out
 
-    def stream(self, queries: Union[int, Iterable]) -> Iterator[QueryResult]:
-        """Serve a batch of queries; yields one QueryResult each.
+    def stream(self, queries: Union[int, Iterable], *,
+               executor: Optional[str] = None) -> Iterator[QueryResult]:
+        """Deprecated: serve queries one at a time (use ``Server.replay``).
 
         ``queries`` is either a count (re-serve the stored features) or an
         iterable of feature arrays (None entries use stored features).
+        ``executor`` overrides the backend for every query in the stream.
+        Kept as a thin lazy shim over the request-level ``Server.replay``
+        with batching and pipelining disabled: one query is served per
+        ``next()``, and per-query latency/throughput/embeddings match the
+        historical serial loop exactly (the Response ``breakdown`` reports
+        the server's collect/execute *stage* split rather than the
+        bottleneck-fog split of ``Session.query``).
         """
+        warnings.warn(
+            "Session.stream is deprecated; use repro.api.Server — "
+            "plan.server().replay(...) — for request-level serving with "
+            "micro-batching and pipelined collect/execute",
+            DeprecationWarning, stacklevel=2)
+        from repro.api.server import Server
+        server = Server(self, max_batch=1, pipelined=False)
         if isinstance(queries, int):
             queries = (None for _ in range(queries))
-        for feats in queries:
-            yield self.query(feats)
+        for q in queries:   # lazily: serve one request per next()
+            yield server.replay([q], executor=executor)[0]
 
     # -- adaptation ---------------------------------------------------------
 

@@ -1,0 +1,83 @@
+"""Arrival-trace generators for the request-level serving front-end.
+
+Each generator returns a list of ``Request`` objects with nondecreasing
+``arrival_time`` on the simulated clock — the input shape
+``Server.replay`` consumes. Rates are requests/second.
+
+  poisson(n, rate)            memoryless arrivals (exp inter-arrivals) —
+                              the standard open-loop serving workload.
+  constant(n, rate)           deterministic 1/rate spacing.
+  bursty(n, rate, ...)        batched sensor wake-ups: bursts of
+                              near-simultaneous queries separated by
+                              idle gaps, at the same long-run rate.
+
+``features_fn(i, rng)`` optionally attaches fresh per-request feature
+uploads (e.g. noisy sensor readings); by default requests re-serve the
+graph's stored features (``features=None``).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.api.server import Request
+
+FeaturesFn = Callable[[int, np.random.Generator], Optional[np.ndarray]]
+
+
+def _build(arrivals: np.ndarray, features_fn: Optional[FeaturesFn],
+           rng: np.random.Generator, executor: Optional[str]) -> List[Request]:
+    out = []
+    for i, t in enumerate(np.asarray(arrivals, float)):
+        feats = None if features_fn is None else features_fn(i, rng)
+        # request_id stays None: the Server assigns ids at submit() in
+        # submission order, so they stay unique even when one server
+        # replays several traces back to back.
+        out.append(Request(features=feats, arrival_time=float(t),
+                           executor=executor))
+    return out
+
+
+def poisson(n: int, rate: float, *, seed: int = 0,
+            features_fn: Optional[FeaturesFn] = None,
+            executor: Optional[str] = None,
+            start: float = 0.0) -> List[Request]:
+    """``n`` Poisson arrivals at ``rate`` req/s (exponential gaps)."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return _build(start + np.cumsum(gaps), features_fn, rng, executor)
+
+
+def constant(n: int, rate: float, *, seed: int = 0,
+             features_fn: Optional[FeaturesFn] = None,
+             executor: Optional[str] = None,
+             start: float = 0.0) -> List[Request]:
+    """``n`` deterministic arrivals spaced exactly ``1/rate`` apart."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    return _build(start + np.arange(1, n + 1) / rate, features_fn, rng,
+                  executor)
+
+
+def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
+           seed: int = 0, features_fn: Optional[FeaturesFn] = None,
+           executor: Optional[str] = None,
+           start: float = 0.0) -> List[Request]:
+    """``n`` arrivals in bursts of ~``burst`` near-simultaneous requests.
+
+    Bursts fire every ``burst/rate`` seconds (so the long-run rate is
+    ``rate``); within a burst, requests are spread by exponential jitter
+    with mean ``jitter`` seconds — the correlated wake-up pattern of
+    co-located IoT sensors.
+    """
+    if rate <= 0 or burst < 1:
+        raise ValueError(f"need rate > 0 and burst >= 1, "
+                         f"got rate={rate}, burst={burst}")
+    rng = np.random.default_rng(seed)
+    base = start + (np.arange(n) // burst + 1) * (burst / rate)
+    arrivals = np.sort(base + rng.exponential(jitter, size=n))
+    return _build(arrivals, features_fn, rng, executor)

@@ -20,7 +20,7 @@ vs. reality stays representative.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -219,53 +219,73 @@ class ServingResult:
 
 
 def simulate_cloud(cluster: FogCluster, *, compress: Optional[str] = None,
-                   congestion: float = 1.0) -> ServingResult:
-    """De-facto cloud serving: full upload over WAN, fast datacenter GPU."""
+                   congestion: float = 1.0,
+                   batch_size: int = 1) -> ServingResult:
+    """De-facto cloud serving: full upload over WAN, fast datacenter GPU.
+
+    ``batch_size`` > 1 prices a micro-batch of B coalesced queries: B full
+    uploads share one WAN round-trip and one coalesced long-tail window
+    (slowest of B*V uploads ~ ln(B*V)), and the GPU runs B inferences
+    back-to-back with one launch overhead.
+    """
     compress = _norm_compress(compress)
+    b = int(batch_size)
     g = cluster.graph
     wan = NETWORKS[cluster.network]["wan"]
     all_v = np.arange(g.num_vertices)
-    wire = _partition_wire_bytes(g, all_v, compress)
-    tail = WAN_TAIL_S * np.log(max(g.num_vertices, 2))
+    wire = _partition_wire_bytes(g, all_v, compress) * b
+    tail = WAN_TAIL_S * np.log(max(b * g.num_vertices, 2))
     collect = wire / wan * congestion + CLOUD_RTT + tail
     cloud = SimNode("cloud", "cloud", NODE_CAPABILITY["cloud"])
-    exec_t = (exec_flops((g.num_vertices, 0), cluster.feature_dim,
-                         cluster.hidden, cluster.k_layers)
+    exec_t = (b * exec_flops((g.num_vertices, 0), cluster.feature_dim,
+                             cluster.hidden, cluster.k_layers)
               / cloud.effective_capability + 5e-3)
     unpack = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
     total = collect + exec_t + unpack
     return ServingResult(np.array([collect]), np.array([exec_t]),
                          np.array([unpack]), total,
-                         1.0 / max(collect, exec_t + unpack), wire)
+                         b / max(collect, exec_t + unpack), wire)
 
 
 def simulate_single_fog(cluster: FogCluster, *,
-                        compress: Optional[str] = None) -> ServingResult:
+                        compress: Optional[str] = None,
+                        batch_size: int = 1) -> ServingResult:
     """Single most-powerful fog node executes everything (paper §II-C)."""
     compress = _norm_compress(compress)
+    b = int(batch_size)
     g = cluster.graph
     lan = NETWORKS[cluster.network]["lan"]
     best = max(cluster.nodes, key=lambda nd: nd.effective_capability)
     all_v = np.arange(g.num_vertices)
-    wire = _partition_wire_bytes(g, all_v, compress)
-    collect = wire / lan + LAN_TAIL_S * np.log(max(g.num_vertices, 2))
-    exec_t = cluster.ground_truth_exec(best, all_v)
+    wire = _partition_wire_bytes(g, all_v, compress) * b
+    collect = wire / lan + LAN_TAIL_S * np.log(max(b * g.num_vertices, 2))
+    exec_t = b * cluster.ground_truth_exec(best, all_v)
     unpack = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
     total = collect + exec_t + unpack
     return ServingResult(np.array([collect]), np.array([exec_t]),
                          np.array([unpack]), total,
-                         1.0 / max(collect, exec_t + unpack), wire)
+                         b / max(collect, exec_t + unpack), wire)
 
 
 def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
-                       compress: Optional[str] = None) -> ServingResult:
+                       compress: Optional[str] = None,
+                       batch_size: int = 1) -> ServingResult:
     """Distributed BSP serving under a data placement (straw-man or IEP).
 
     Latency = max_j (collect_j + exec_j) + K*delta sync (Eq. 6/7); unpack is
     pipelined on a separate thread (§III-D) and overlaps execution, so only
     its non-overlapped remainder counts.
+
+    ``batch_size`` > 1 prices a micro-batch of B coalesced queries (§III-D
+    micro-batching): each fog collects B feature uploads in one window —
+    paying the device-side packing overhead once and one coalesced
+    long-tail (slowest of B*|V_j| uploads ~ ln(B*|V_j|)) — then runs one
+    batched BSP superstep whose per-layer synchronizations carry all B
+    feature sets, so the K*delta sync cost is paid once per batch instead
+    of once per query.
     """
     compress = _norm_compress(compress)
+    b = int(batch_size)
     g = cluster.graph
     n = len(cluster.nodes)
     collect = np.zeros(n)
@@ -276,42 +296,122 @@ def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
         mine = np.flatnonzero(placement.assignment == j)
         if mine.size == 0:
             continue
-        wire = _partition_wire_bytes(g, mine, compress)
+        wire = _partition_wire_bytes(g, mine, compress) * b
         wire_total += wire
         bw = cluster.node_bandwidth(node)
         collect[j] = (wire / bw + (QUANTIZE_OVERHEAD_S if compress else 0.0)
-                      + LAN_TAIL_S * np.log(max(len(mine), 2)))
-        exec_t[j] = (cluster.ground_truth_exec(node, mine)
+                      + LAN_TAIL_S * np.log(max(b * len(mine), 2)))
+        exec_t[j] = (b * cluster.ground_truth_exec(node, mine)
                      + cluster.k_layers * cluster.sync_cost)
         unpack[j] = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
         # Pipelined unpack: only the part not hidden by execution adds.
         exec_t[j] += max(0.0, unpack[j] - exec_t[j]) * 0.0
     per_fog = collect + exec_t
     total = float(per_fog.max())
-    throughput = 1.0 / max(collect.max(), exec_t.max())
+    throughput = b / max(collect.max(), exec_t.max())
     return ServingResult(collect, exec_t, unpack, total, throughput,
                          wire_total)
 
 
 def simulate(pipeline: str, cluster: FogCluster,
              placement: Optional[Placement] = None, *,
-             compress: Optional[str] = None) -> ServingResult:
+             compress: Optional[str] = None,
+             batch_size: int = 1) -> ServingResult:
     """Dispatch the latency accounting for one serving pipeline.
 
     ``pipeline``: "cloud", "single" (most powerful fog) or "multi"
     (distributed BSP under ``placement``). Executor backends resolve their
-    accounting through this single entry point.
+    accounting through this single entry point. ``batch_size`` prices a
+    micro-batch of coalesced queries (B=1 is one query and reproduces the
+    unbatched numbers exactly).
     """
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
     if pipeline == "cloud":
-        return simulate_cloud(cluster, compress=compress)
+        return simulate_cloud(cluster, compress=compress,
+                              batch_size=batch_size)
     if pipeline == "single":
-        return simulate_single_fog(cluster, compress=compress)
+        return simulate_single_fog(cluster, compress=compress,
+                                   batch_size=batch_size)
     if pipeline == "multi":
         if placement is None:
             raise ValueError("pipeline 'multi' needs a placement")
-        return simulate_multi_fog(cluster, placement, compress=compress)
+        return simulate_multi_fog(cluster, placement, compress=compress,
+                                  batch_size=batch_size)
     raise ValueError(f"unknown pipeline {pipeline!r}; "
                      "available: cloud, multi, single")
+
+
+# ----------------------------------------------------------------------------
+# Two-stage collect/execute pipeline (paper §III-D "parallelized
+# data collection": query i+1's compressed collection overlaps query i's
+# execution on the fogs)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchSchedule:
+    """Timeline of one micro-batch through the two-stage pipeline.
+
+    The collection stage (shared uplink + unpack threads) and the
+    execution stage (fog CPUs + BSP syncs) are each serially reusable, so
+    batch k's collection may overlap batch k-1's execution but two batches
+    never collect (or execute) concurrently. ``overlap_saved`` is the time
+    this batch's collection ran concurrently with the previous batch's
+    execution — the §III-D pipelining win.
+    """
+    ready: float
+    collect_start: float
+    collect_end: float
+    execute_start: float
+    execute_end: float
+    overlap_saved: float = 0.0
+
+    @property
+    def queue_delay(self) -> float:
+        return self.collect_start - self.ready
+
+    @property
+    def span(self) -> float:
+        return self.execute_end - self.collect_start
+
+
+def pipeline_schedule(batches: Sequence[Tuple[float, float, float]],
+                      *, pipelined: bool = True,
+                      start: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+                      ) -> List[BatchSchedule]:
+    """Schedule ``(ready, collect, execute)`` stage times through the
+    two-stage pipeline; returns one :class:`BatchSchedule` per batch.
+
+    ``pipelined=False`` reproduces the strictly serial loop (batch k's
+    collection waits for batch k-1's execution to finish) — the
+    ``Session.stream`` baseline the pipelined server is measured against.
+
+    ``start`` is ``(collect_free, execute_free, prev_execute_start)``
+    resource state, so callers (the ``Server``) can schedule batches
+    incrementally in O(1) each: feed ``schedule_state(sched[-1])`` of one
+    call as the ``start`` of the next.
+    """
+    out: List[BatchSchedule] = []
+    collect_free, execute_free, prev_e_start = start
+    for ready, c_t, e_t in batches:
+        floor = collect_free if pipelined else max(collect_free, execute_free)
+        c_start = max(ready, floor)
+        c_end = c_start + c_t
+        e_start = max(c_end, execute_free)
+        e_end = e_start + e_t
+        # Intersection of this collect window with the previous execute
+        # window: the collection time hidden behind execution.
+        overlap = max(0.0, min(c_end, execute_free) - max(c_start,
+                                                          prev_e_start))
+        out.append(BatchSchedule(ready, c_start, c_end, e_start, e_end,
+                                 overlap))
+        collect_free, execute_free, prev_e_start = c_end, e_end, e_start
+    return out
+
+
+def schedule_state(sched: BatchSchedule) -> Tuple[float, float, float]:
+    """Resource state after ``sched``, for ``pipeline_schedule(start=...)``."""
+    return (sched.collect_end, sched.execute_end, sched.execute_start)
 
 
 def apply_load_trace(cluster: FogCluster, loads: Sequence[float]) -> None:

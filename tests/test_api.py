@@ -10,8 +10,9 @@ import jax
 import numpy as np
 import pytest
 
-from repro.api import (COMPRESSORS, EXCHANGES, EXECUTORS, PARTITIONERS,
-                       PLACEMENTS, Engine, ModelSpec, UnknownComponentError)
+from repro.api import (ALL_REGISTRIES, COMPRESSORS, EXCHANGES, EXECUTORS,
+                       PARTITIONERS, PLACEMENTS, Engine, ModelSpec,
+                       UnknownComponentError)
 from repro.gnn import datasets, models
 from repro.runtime import serving
 
@@ -35,7 +36,30 @@ def test_registries_have_expected_keys():
     assert {"iep", "metis+greedy", "random"} <= set(PLACEMENTS.keys())
     assert {"daq", "uniform8", "none"} <= set(COMPRESSORS.keys())
     assert set(EXCHANGES.keys()) == {"allgather", "halo"}
-    assert {"sim", "single", "mesh-bsp"} <= set(EXECUTORS.keys())
+    assert {"sim", "single", "mesh-bsp", "cloud"} <= set(EXECUTORS.keys())
+
+
+@pytest.mark.parametrize("name", sorted(ALL_REGISTRIES))
+def test_unknown_key_message_names_registry_and_keys(name):
+    """Every registry's resolve error names the registry and lists every
+    available key (e.g. unknown executor backend 'mesh'; available:
+    cloud, mesh-bsp, sim, single (did you mean 'mesh-bsp'?))."""
+    registry = ALL_REGISTRIES[name]
+    with pytest.raises(UnknownComponentError) as ei:
+        registry.resolve("definitely-not-a-key")
+    msg = str(ei.value)
+    assert registry.kind in msg
+    assert "definitely-not-a-key" in msg
+    for key in registry.keys():
+        assert key in msg
+    assert ei.value.available == tuple(registry.keys())
+
+
+def test_unknown_key_suggests_close_match():
+    with pytest.raises(UnknownComponentError, match="did you mean 'mesh-bsp'"):
+        EXECUTORS.resolve("mesh")
+    with pytest.raises(UnknownComponentError, match="did you mean 'daq'"):
+        COMPRESSORS.resolve("dac")
 
 
 def test_unknown_key_error_lists_available(setup):
@@ -162,6 +186,29 @@ def test_sim_and_single_numerically_equal(setup):
         assert r.latency > 0 and r.throughput > 0 and r.wire_bytes > 0
     assert r_sim.exchange_bytes > 0        # BSP sync payload
     assert r_single.exchange_bytes == 0    # no cross-fog sync
+
+
+def test_cloud_executor_end_to_end(setup):
+    """Fig. 3 cloud-vs-fog through the same API: identical numerics,
+    WAN-dominated collection, no cross-fog sync."""
+    g, params = setup
+    base = dict(cluster="1A+2B+1C", compressor="daq")
+    r_fog = Engine((params, "gcn"), executor="sim",
+                   **base).compile(g).session().query()
+    r_cloud = Engine((params, "gcn"), executor="cloud",
+                     **base).compile(g).session().query()
+    np.testing.assert_allclose(r_cloud.embeddings, r_fog.embeddings,
+                               rtol=1e-6, atol=1e-6)
+    assert r_cloud.backend == "cloud"
+    assert r_cloud.exchange_bytes == 0          # no BSP sync to the cloud
+    assert {"collect", "execute", "unpack", "total"} <= set(r_cloud.breakdown)
+    # paper Fig. 3: fog collection is a fraction of the cloud's WAN upload
+    assert r_fog.breakdown["collect"] < 0.5 * r_cloud.breakdown["collect"]
+    # a per-query override reaches the same accounting
+    r_override = Engine((params, "gcn"), executor="sim", **base).compile(
+        g).session().query(executor="cloud")
+    assert r_override.backend == "cloud"
+    assert r_override.latency == pytest.approx(r_cloud.latency)
 
 
 def test_compressor_swap_changes_wire_not_agreement(setup):

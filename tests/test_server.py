@@ -1,0 +1,279 @@
+"""Request-level Server: batching semantics, pipeline timings, traces.
+
+The load-bearing guarantees:
+  * batched Server responses are numerically IDENTICAL (bit-for-bit) to
+    the same requests served one-by-one via Session.query, per executor;
+  * queue/batch/overlap timing fields are internally consistent;
+  * pipelined micro-batching beats the serial Session.stream loop on a
+    Poisson trace (the paper's §III-D speedup, acceptance criterion).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Engine, Request, Server, traces
+from repro.core import simulation
+from repro.gnn import datasets, models
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("siot", scale=0.08, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 32, 8])
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C",
+                  compressor="daq").compile(g)
+    return g, params, plan
+
+
+# ----------------------------------------------------------------------------
+# Batching semantics: batched == serial, bit for bit
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["sim", "single", "cloud"])
+def test_batched_responses_identical_to_serial_queries(setup, executor):
+    g, params, plan = setup
+    rng = np.random.default_rng(0)
+    feats = [None] + [g.features + rng.normal(scale=0.01, size=g.features.shape)
+                      for _ in range(5)]
+    serial = [plan.session(executor=executor).query(f) for f in feats]
+    server = plan.server(max_batch=4, max_wait=1e9, executor=executor)
+    batched = server.replay([Request(features=f, arrival_time=0.0)
+                             for f in feats])
+    assert len(batched) == len(serial)
+    assert max(r.batch_size for r in batched) > 1   # coalescing happened
+    for b, s in zip(batched, serial):
+        assert np.array_equal(b.embeddings, s.embeddings)   # bit-identical
+        assert b.backend == s.backend == executor
+
+
+def test_mesh_bsp_batched_identical_subprocess():
+    """mesh-bsp through the Server: batched == serial, real device mesh."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.api import Engine, Request
+        g_mod = __import__('repro.gnn.datasets', fromlist=['load'])
+        from repro.gnn import datasets, models
+        g = datasets.load('yelp', scale=0.06, seed=3)
+        params = models.gnn_init(jax.random.PRNGKey(0), 'sage',
+                                 [g.feature_dim, 16, 8])
+        plan = Engine((params, 'sage'), cluster='4B', compressor='daq',
+                      executor='mesh-bsp').compile(g)
+        serial = [plan.session().query() for _ in range(3)]
+        batched = plan.server(max_batch=4, max_wait=1e9).replay(
+            [Request(arrival_time=0.0) for _ in range(3)])
+        assert batched[0].batch_size == 3
+        for b, s in zip(batched, serial):
+            assert np.array_equal(b.embeddings, s.embeddings)
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+def test_mixed_executor_requests_do_not_coalesce(setup):
+    g, params, plan = setup
+    reqs = [Request(arrival_time=0.0),
+            Request(arrival_time=0.0, executor="single"),
+            Request(arrival_time=0.0)]
+    out = plan.server(max_batch=8, max_wait=1e9).replay(reqs)
+    assert [r.backend for r in out] == ["sim", "single", "sim"]
+    # FIFO batching: the incompatible request splits the batch
+    assert all(r.batch_size == 1 for r in out)
+
+
+# ----------------------------------------------------------------------------
+# Timing-field consistency
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trace_fn", [traces.poisson, traces.constant,
+                                      traces.bursty])
+def test_response_timing_fields_consistent(setup, trace_fn):
+    g, params, plan = setup
+    server = plan.server(max_batch=4, max_wait=0.05)
+    responses = server.replay(trace_fn(20, 8.0, seed=2))
+    assert len(responses) == 20
+    assert sorted(r.request_id for r in responses) == list(range(20))
+    for r in responses:
+        assert r.queue_delay >= 0.0
+        assert r.collect_time > 0.0 and r.execute_time > 0.0
+        assert r.latency >= max(r.collect_time, r.execute_time)
+        assert r.latency >= r.queue_delay
+        assert r.service_start >= r.arrival_time
+        assert r.finish_time == pytest.approx(r.arrival_time + r.latency)
+        assert r.overlap_saved >= 0.0
+        assert 1 <= r.batch_size <= 4
+        assert r.breakdown["total"] == pytest.approx(r.latency)
+    # batches never overlap in their collect stage and execute in order
+    by_batch = {}
+    for r in responses:
+        by_batch.setdefault(r.batch_index, r)
+    starts = [by_batch[k].service_start for k in sorted(by_batch)]
+    assert starts == sorted(starts)
+
+
+def test_batch_accounting_amortizes_costs(setup):
+    """B=1 reproduces single-query pricing exactly; B>1 is cheaper than B
+    serial queries (coalesced tail + one sync round), never cheaper than
+    one."""
+    g, params, plan = setup
+    one = simulation.simulate("multi", plan.cluster, plan.placement,
+                              compress="daq")
+    ref = simulation.simulate("multi", plan.cluster, plan.placement,
+                              compress="daq", batch_size=1)
+    assert ref.total_latency == one.total_latency
+    assert ref.wire_bytes == one.wire_bytes
+    for b in (2, 4, 8):
+        res = simulation.simulate("multi", plan.cluster, plan.placement,
+                                  compress="daq", batch_size=b)
+        assert one.total_latency < res.total_latency < b * one.total_latency
+        assert res.wire_bytes == pytest.approx(b * one.wire_bytes)
+        assert res.throughput > one.throughput
+
+
+def test_pipeline_schedule_overlap_model():
+    # Two batches: second's collection fully overlaps first's execution.
+    sched = simulation.pipeline_schedule(
+        [(0.0, 1.0, 2.0), (0.0, 1.0, 2.0), (0.0, 1.0, 2.0)])
+    assert [s.collect_start for s in sched] == [0.0, 1.0, 2.0]
+    assert sched[-1].execute_end == 1.0 + 3 * 2.0     # steady state: max(C,E)
+    assert sched[1].overlap_saved == 1.0              # fully hidden collect
+    serial = simulation.pipeline_schedule(
+        [(0.0, 1.0, 2.0)] * 3, pipelined=False)
+    assert serial[-1].execute_end == 3 * 3.0
+    for s in serial:
+        assert s.overlap_saved == 0.0
+
+
+# ----------------------------------------------------------------------------
+# Throughput: pipelined micro-batching beats the serial loop
+# ----------------------------------------------------------------------------
+
+def test_server_beats_serial_stream_on_poisson_trace(setup):
+    g, params, plan = setup
+    trace = traces.poisson(24, rate=10.0, seed=1)
+    serial = plan.server(max_batch=1, pipelined=False).replay(list(trace))
+    piped = plan.server(max_batch=8, max_wait=0.05).replay(list(trace))
+    s0, s1 = Server.summarize(serial), Server.summarize(piped)
+    assert s1["makespan_s"] < s0["makespan_s"]
+    assert s1["throughput_rps"] > s0["throughput_rps"]
+    assert s1["latency_mean_s"] < s0["latency_mean_s"]
+    assert s1["mean_batch"] > 1.0
+    assert s1["overlap_saved_s"] > 0.0
+    # and the numerics still agree request-by-request
+    for a, b in zip(serial, piped):
+        assert np.array_equal(a.embeddings, b.embeddings)
+
+
+# ----------------------------------------------------------------------------
+# Session stage split + stream shim
+# ----------------------------------------------------------------------------
+
+def test_session_stages_compose_to_query(setup):
+    g, params, plan = setup
+    sess = plan.session()
+    feats = sess.collect()
+    emb = sess.execute(feats)
+    res = sess.account()
+    q = plan.session().query()
+    assert np.array_equal(emb, q.embeddings)
+    assert res.total_latency == pytest.approx(q.latency)
+
+
+def test_stream_shim_matches_query_and_warns(setup):
+    g, params, plan = setup
+    q = plan.session().query()
+    with pytest.warns(DeprecationWarning, match="Server.replay|Server"):
+        rs = list(plan.session().stream(3))
+    assert len(rs) == 3
+    for r in rs:
+        assert np.array_equal(r.embeddings, q.embeddings)
+        assert r.latency == pytest.approx(q.latency)   # serial accounting
+        assert r.queue_delay == 0.0 and r.batch_size == 1
+
+
+def test_stream_shim_stays_lazy(setup):
+    """The deprecated shim serves one query per next(), like the old loop."""
+    g, params, plan = setup
+    sess = plan.session()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        it = sess.stream(5)
+        assert sess.num_queries == 0    # nothing served until consumed
+        next(it)
+    assert sess.num_queries == 1
+
+
+def test_stream_forwards_executor_override(setup):
+    """Regression: stream used to drop the per-query executor override."""
+    g, params, plan = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rs = list(plan.session().stream(2, executor="single"))
+    assert [r.backend for r in rs] == ["single", "single"]
+    # per-request override through replay wins over the replay-wide one
+    out = plan.server(max_batch=1).replay(
+        [Request(executor="cloud"), Request()], executor="single")
+    assert [r.backend for r in out] == ["cloud", "single"]
+
+
+def test_server_adapt_every_ticks_per_request(setup):
+    g, params, plan = setup
+    server = plan.server(max_batch=4, max_wait=1e9, adapt_every=2, lam=1.5)
+    server.replay([Request(arrival_time=0.0) for _ in range(4)])
+    assert server.session.num_queries == 4
+    assert len(server.session.state.mode_history) == 2
+
+
+def test_request_ids_stay_unique_across_replays(setup):
+    g, params, plan = setup
+    server = plan.server(max_batch=2)
+    a = server.replay(traces.poisson(4, 8.0, seed=0))
+    b = server.replay(traces.poisson(4, 8.0, seed=0))
+    assert sorted(r.request_id for r in a + b) == list(range(8))
+
+
+def test_bad_requests_rejected_at_admission_and_drain_requeues(setup):
+    from repro.api import UnknownComponentError
+    g, params, plan = setup
+    server = plan.server(max_batch=1)
+    with pytest.raises(UnknownComponentError, match="executor"):
+        server.submit(executor="nope")          # rejected before queueing
+    assert not server._pending
+    # a failure mid-drain (here: wrongly shaped features) requeues the
+    # failing and the not-yet-served requests instead of dropping them
+    server.submit(arrival_time=0.0)
+    server.submit(np.zeros((3, 3)), arrival_time=0.0)
+    server.submit(arrival_time=0.0)
+    with pytest.raises(Exception):
+        server.drain()
+    assert len(server._pending) == 2
+
+
+def test_submit_drain_roundtrip_and_clock_persistence(setup):
+    g, params, plan = setup
+    server = plan.server(max_batch=2)
+    server.submit(arrival_time=0.0)
+    server.submit(arrival_time=0.0)
+    first = server.drain()
+    assert len(first) == 2 and first[0].batch_size == 2
+    # the simulated clock persists: a new arrival at t=0 queues behind the
+    # first batch's collection (though it may overlap its execution)
+    late = server.replay([Request(arrival_time=0.0)])
+    assert (late[0].service_start
+            >= first[-1].service_start + first[-1].collect_time - 1e-9)
+    assert late[0].queue_delay > 0.0
+    assert server.num_batches == 2
