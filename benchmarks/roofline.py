@@ -1,18 +1,247 @@
-"""Aggregate dry-run JSONs into the §Roofline table (EXPERIMENTS.md).
+"""Aggregation roofline: segment_sum vs the Pallas block-CSR kernels.
 
-Reads results/dryrun/*.json produced by repro.launch.dryrun and emits a
-markdown table with the three roofline terms per (arch x shape x mesh),
-the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and memory-fit status.
+Sweeps the two shard-local aggregation paths (plus the DAQ-fused
+``dequant_spmm`` wire variant) over a range of partition counts — i.e.
+per-shard sizes — on the exact operands the ``mesh-bsp`` runtime feeds
+them: the local [P, F] slot table and the gathered [n*B, F] halo table
+built by ``runtime.bsp.build_partitioned``. For every (partition-count,
+shard, path) point it reports wall-clock, analytic FLOPs/bytes and the
+achieved GFLOP/s / GB/s, and writes the whole sweep to
+``BENCH_roofline.json``.
+
+Off-TPU the kernels run in Pallas interpret mode, so absolute kernel
+timings there measure the interpreter, not the MXU — the numbers to read
+on CPU are the segment-sum baseline, the parity columns and the analytic
+roofline terms; on a TPU backend the same script times the real kernels.
+
+    PYTHONPATH=src python benchmarks/roofline.py            # full sweep
+    PYTHONPATH=src python benchmarks/roofline.py --smoke    # CI guard
+
+The CI ``--smoke`` mode shrinks the sweep and fails (exit 1) unless every
+kernel-path output matches segment_sum within float32 tolerance (and the
+DAQ-fused path within quantization tolerance).
+
+The file's previous role — aggregating ``repro.launch.dryrun`` JSONs into
+the transformer-substrate roofline table — is kept behind
+``--dryrun-path results/dryrun``.
 """
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(REPO, "src", "repro")):
+    sys.path.insert(0, os.path.join(REPO, "src"))
 
 HBM_PER_CHIP = 16e9  # v5e
 
+
+# ----------------------------------------------------------------------------
+# Aggregation-path sweep (the serving hot path)
+# ----------------------------------------------------------------------------
+
+def _time_fn(fn, repeats: int) -> float:
+    """Median wall-clock of ``fn()`` (jax work block_until_ready'd)."""
+    import jax
+    times = []
+    fn()  # warm up / compile
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _halo_table(g, pg):
+    """The gathered [n*B, F] halo table, shared by every shard."""
+    import numpy as np
+    f = g.feature_dim
+    halo = np.zeros((pg.n, pg.boundary_slots, f), np.float32)
+    for q in range(pg.n):
+        halo[q] = pg.feats[q][pg.boundary_rows[q]] * \
+            pg.boundary_mask[q][:, None]
+    return halo.reshape(-1, f)
+
+
+def sweep_partitions(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import partition
+    from repro.core.compression import _quantize_rows
+    from repro.gnn import datasets
+    from repro.gnn.layers import EdgeList, aggregate_sum
+    from repro.kernels.daq_dequant import dequant_spmm
+    from repro.kernels.gather_aggregate import block_spmm
+    from repro.runtime import bsp
+
+    g = datasets.load(args.dataset, scale=args.scale, seed=0)
+    interpret = jax.default_backend() != "tpu"
+    rows = []
+    worst = {"pallas": 0.0, "pallas+daq": 0.0}
+    for n_parts in args.partitions:
+        assign = partition.bgp(g, n_parts, seed=0)
+        pg = bsp.build_partitioned(g, assign)
+        halo_tab = _halo_table(g, pg)
+        for p in range(pg.n):
+            h = pg.feats[p]                           # [P, F] local slots
+            f = g.feature_dim
+            edges_real = int(pg.edge_mask[p].sum())
+            # --- segment_sum: gather + scatter-add over the combined table
+            h_src = jnp.concatenate([jnp.asarray(h), jnp.asarray(halo_tab)])
+            senders = jnp.asarray(pg.senders_halo[p])
+            receivers = jnp.asarray(pg.receivers_local[p])
+            emask = jnp.asarray(pg.edge_mask[p])
+            hj = jnp.asarray(h)
+
+            @jax.jit
+            def seg_path(hj=hj, h_src=h_src, senders=senders,
+                         receivers=receivers, emask=emask, slots=pg.slots):
+                edges = EdgeList(senders, receivers, emask, slots)
+                return aggregate_sum(hj, edges, h_src)
+
+            seg = np.asarray(seg_path())
+            t_seg = _time_fn(seg_path, args.repeats)
+
+            # --- pallas: local SpMM + halo SpMM over the pre-blocked shards
+            lcsr, hcsr = pg.local_csr, pg.halo_csr
+            lblk = jnp.asarray(lcsr.blocks[p])
+            lcol, lmsk = jnp.asarray(lcsr.cols[p]), jnp.asarray(lcsr.mask[p])
+            hblk = jnp.asarray(hcsr.blocks[p])
+            hcol, hmsk = jnp.asarray(hcsr.cols[p]), jnp.asarray(hcsr.mask[p])
+            loc = jnp.asarray(np.pad(h, ((0, lcsr.src_rows - h.shape[0]),
+                                         (0, 0))))
+            hal = jnp.asarray(np.pad(
+                halo_tab, ((0, hcsr.src_rows - halo_tab.shape[0]), (0, 0))))
+
+            def kernel_path():
+                out = block_spmm(lblk, lcol, lmsk, loc, interpret=interpret)
+                return out + block_spmm(hblk, hcol, hmsk, hal,
+                                        interpret=interpret)
+
+            pal = np.asarray(kernel_path())[:pg.slots]
+            t_pal = _time_fn(kernel_path, args.repeats)
+            worst["pallas"] = max(worst["pallas"],
+                                  float(np.abs(pal - seg).max()))
+
+            # --- pallas + DAQ-fused halo (uint8 wire, dequant in-kernel)
+            codes, mins, scales = _quantize_rows(
+                np.asarray(hal, np.float64), 8)
+            codes = jnp.asarray(codes.astype(np.uint8))
+            sc = jnp.asarray(scales.astype(np.float32))
+            mn = jnp.asarray(mins.astype(np.float32))
+
+            def fused_path():
+                out = block_spmm(lblk, lcol, lmsk, loc, interpret=interpret)
+                return out + dequant_spmm(hblk, hcol, hmsk, codes, sc, mn,
+                                          interpret=interpret)
+
+            fused = np.asarray(fused_path())[:pg.slots]
+            t_fused = _time_fn(fused_path, args.repeats)
+            scale_err = float(np.abs(np.asarray(hal)).max()) or 1.0
+            worst["pallas+daq"] = max(
+                worst["pallas+daq"],
+                float(np.abs(fused - seg).max()) / scale_err)
+
+            # --- analytic roofline terms (per shard-local aggregation)
+            flops = 2.0 * edges_real * f
+            seg_bytes = (edges_real * f * 4        # gathered messages
+                         + pg.slots * f * 4 * 2)   # acc read+write
+            n_tiles = int(lcsr.mask[p].sum() + hcsr.mask[p].sum())
+            blk = lblk.shape[-1]
+            pal_bytes = (n_tiles * blk * blk * 4        # adjacency tiles
+                         + n_tiles * blk * f * 4        # source panels
+                         + pg.slots * f * 4)            # output
+            fused_bytes = (n_tiles * blk * blk * 4
+                           + int(lcsr.mask[p].sum()) * blk * f * 4
+                           + int(hcsr.mask[p].sum()) * blk * (f + 8)
+                           + pg.slots * f * 4)
+            for path, t, nbytes in (("segment_sum", t_seg, seg_bytes),
+                                    ("pallas", t_pal, pal_bytes),
+                                    ("pallas+daq", t_fused, fused_bytes)):
+                rows.append({
+                    "partitions": n_parts, "part": p,
+                    "vertices": int(pg.vertex_mask[p].sum()),
+                    "edges": edges_real, "feature_dim": f,
+                    "halo_rows": int(pg.boundary_mask.sum()),
+                    "path": path, "time_s": t,
+                    "flops": flops, "bytes": nbytes,
+                    "gflops": flops / t / 1e9,
+                    "gbs": nbytes / t / 1e9,
+                    "speedup_vs_segment_sum": t_seg / t,
+                })
+    return {"rows": rows, "max_abs_err": worst,
+            "graph": {"vertices": g.num_vertices, "edges": g.num_edges,
+                      "feature_dim": g.feature_dim}}
+
+
+def print_rows(rows) -> None:
+    hdr = (f"{'n':>3} {'part':>4} {'|V|':>6} {'|E|':>7} {'path':<12} "
+           f"{'time':>10} {'GFLOP/s':>9} {'GB/s':>8} {'vs seg':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['partitions']:>3} {r['part']:>4} {r['vertices']:>6} "
+              f"{r['edges']:>7} {r['path']:<12} {r['time_s'] * 1e3:>8.3f}ms "
+              f"{r['gflops']:>9.3f} {r['gbs']:>8.3f} "
+              f"{r['speedup_vs_segment_sum']:>6.2f}x")
+
+
+def main_sweep(args) -> int:
+    import numpy as np
+
+    result = sweep_partitions(args)
+    rows = result["rows"]
+    print_rows(rows)
+    by_path = {}
+    for r in rows:
+        by_path.setdefault(r["path"], []).append(r["speedup_vs_segment_sum"])
+    summary = {p: float(np.exp(np.mean(np.log(v))))
+               for p, v in by_path.items()}
+    print("geomean speedup vs segment_sum per path:",
+          {k: round(v, 3) for k, v in summary.items()})
+    print("max parity error vs segment_sum:", result["max_abs_err"])
+
+    payload = {
+        "benchmark": "aggregation_roofline",
+        "backend": __import__("jax").default_backend(),
+        "config": {k: v for k, v in vars(args).items()
+                   if k not in ("smoke", "dryrun_path", "mesh", "out")},
+        "graph": result["graph"],
+        "geomean_speedup_vs_segment_sum": summary,
+        "max_abs_err": result["max_abs_err"],
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+    # Acceptance guard: the kernel paths must agree with segment_sum —
+    # exactly (f32) for the float path, within 8-bit quantization error
+    # for the DAQ-fused wire.
+    err = result["max_abs_err"]
+    if err["pallas"] > 1e-3:
+        print(f"FAIL: pallas path diverges from segment_sum ({err})")
+        return 1
+    if err["pallas+daq"] > 5e-2:
+        print(f"FAIL: DAQ-fused path outside quantization tolerance ({err})")
+        return 1
+    print("PASS: kernel aggregation matches segment_sum on every shard")
+    return 0
+
+
+# ----------------------------------------------------------------------------
+# Legacy mode: aggregate repro.launch.dryrun JSONs (transformer substrate)
+# ----------------------------------------------------------------------------
 
 def fmt_s(x):
     if x >= 1.0:
@@ -21,6 +250,7 @@ def fmt_s(x):
 
 
 def load_results(path: str):
+    import glob
     rows = []
     for f in sorted(glob.glob(os.path.join(path, "*.json"))):
         with open(f) as fh:
@@ -90,16 +320,47 @@ def summary(rows):
     return "\n".join(lines)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--path", default="results/dryrun")
-    ap.add_argument("--mesh", default="16x16")
-    args = ap.parse_args()
-    rows = load_results(args.path)
+def main_dryrun_table(args) -> int:
+    rows = load_results(args.dryrun_path)
     print(summary(rows))
     print()
     print(table(rows, args.mesh))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + pass/fail parity guard (scripts/ci.sh)")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_roofline.json"))
+    ap.add_argument("--dataset", default="siot")
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--partitions", type=int, nargs="+", default=[2, 4, 8])
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--dryrun-path", default=None,
+                    help="legacy mode: aggregate repro.launch.dryrun JSONs "
+                         "from this directory into the §Roofline table")
+    ap.add_argument("--mesh", default="16x16",
+                    help="(legacy mode) mesh filter for the dryrun table")
+    args = ap.parse_args(argv)
+
+    if args.dryrun_path:
+        return main_dryrun_table(args)
+
+    if args.smoke:
+        # Shrink only what the user did not set explicitly.
+        if args.scale == ap.get_default("scale"):
+            args.scale = 0.05
+        if args.partitions == ap.get_default("partitions"):
+            args.partitions = [2, 4]
+        if args.repeats == ap.get_default("repeats"):
+            args.repeats = 2
+        if args.out == ap.get_default("out"):   # don't dirty the worktree
+            import tempfile
+            args.out = os.path.join(tempfile.gettempdir(),
+                                    "BENCH_roofline.smoke.json")
+    return main_sweep(args)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -9,3 +9,6 @@ python -m pytest -x -q "$@"
 # Keep the throughput benchmark entry point from rotting: tiny sweep with a
 # built-in pass/fail guard (pipelined server must beat the serial loop).
 PYTHONPATH=src python benchmarks/throughput.py --smoke
+# Aggregation roofline: the Pallas kernel paths must match segment_sum on
+# every shard (exact for the float path, quantization-bounded for DAQ).
+PYTHONPATH=src python benchmarks/roofline.py --smoke

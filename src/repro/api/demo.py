@@ -23,6 +23,10 @@ def main(argv=None) -> int:
     ap.add_argument("--compressor", default="daq")
     ap.add_argument("--placement", default="iep")
     ap.add_argument("--executor", default="sim")
+    ap.add_argument("--aggregation", default="auto",
+                    choices=["segment_sum", "pallas", "auto"],
+                    help="shard-local aggregation path (pallas = the "
+                         "block-CSR kernels; auto = kernels on TPU)")
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="Poisson arrival rate (req/s) for the trace")
@@ -43,7 +47,8 @@ def main(argv=None) -> int:
 
     engine = Engine((params, args.kind), cluster=args.cluster,
                     network=args.network, compressor=args.compressor,
-                    placement=args.placement, executor=args.executor)
+                    placement=args.placement, executor=args.executor,
+                    aggregation=args.aggregation)
     plan = engine.compile(graph)
     print("placement (vertices per fog):", plan.vertices_per_fog())
     print(f"estimated makespan: {plan.est_makespan:.3f}s")

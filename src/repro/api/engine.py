@@ -36,6 +36,13 @@ class Engine:
       partitioner / placement / compressor / exchange / executor: registry
         keys for the five pluggable stages. Unknown keys raise immediately
         with the list of available options.
+      aggregation: shard-local aggregation path — "segment_sum" (gather +
+        ``jax.ops.segment_sum``), "pallas" (the block-CSR Pallas kernels;
+        strict — raises for unsupported kind/exchange combinations) or
+        "auto" (kernels wherever supported when running on TPU, else
+        segment_sum). With a DAQ compressor the mesh executor's kernel
+        path also quantizes the halo wire and dequantizes inside the
+        fused ``dequant_spmm`` kernel.
       network: collection-network profile ("wifi" / "4g" / "5g").
       hidden: hidden width used by the analytic workload model.
       sync_cost: one BSP synchronization (delta in Eq. 6/7).
@@ -50,7 +57,8 @@ class Engine:
                  compressor: str = "daq", exchange: str = "halo",
                  executor: str = "sim", hidden: int = 64, seed: int = 0,
                  sync_cost: float = simulation.DEFAULT_SYNC_COST,
-                 bytes_per_vertex: Optional[float] = None):
+                 bytes_per_vertex: Optional[float] = None,
+                 aggregation: str = "auto"):
         self.model: ModelSpec = as_model(model)
         self.cluster = cluster
         # Resolve every stage eagerly so bad keys fail at construction.
@@ -60,6 +68,14 @@ class Engine:
             "none" if compressor is None else compressor)
         self._exchange = EXCHANGES.resolve(exchange)
         self._executor = EXECUTORS.resolve(executor)
+        # Validate the aggregation knob eagerly too: "pallas" is strict
+        # about the model kind (and about the exchange on backends that
+        # aggregate over the per-shard block-CSR operands).
+        bsp.resolve_aggregation(
+            aggregation, self.model.kind,
+            exchange=exchange if getattr(self._executor,
+                                         "needs_block_shards", False)
+            else None)
         self.config = EngineConfig(
             partitioner=PARTITIONERS.canonical(partitioner),
             placement=PLACEMENTS.canonical(placement),
@@ -70,7 +86,7 @@ class Engine:
             network=network,
             cluster_spec=cluster if isinstance(cluster, str) else None,
             hidden=hidden, seed=seed, sync_cost=sync_cost,
-            bytes_per_vertex=bytes_per_vertex)
+            bytes_per_vertex=bytes_per_vertex, aggregation=aggregation)
 
     def compile(self, graph: Graph) -> Plan:
         """Setup phase (paper steps 1-2): profile, register, plan, freeze."""
@@ -90,8 +106,16 @@ class Engine:
             sync_cost=cluster.sync_cost, seed=cfg.seed,
             bytes_per_vertex=cfg.bytes_per_vertex,
             partitioner=self._partitioner)
-        # Freeze the static-shape per-partition buffers once.
-        partitioned = bsp.build_partitioned(graph, placement.assignment)
+        # Freeze the static-shape per-partition buffers once. The block-CSR
+        # shards are only built when this engine's own backend would read
+        # them (sessions that override to a kernel path rebuild lazily).
+        needs_shards = getattr(self._executor, "needs_block_shards", False)
+        mode = bsp.resolve_aggregation(
+            cfg.aggregation, self.model.kind,
+            exchange=cfg.exchange if needs_shards else None)
+        partitioned = bsp.build_partitioned(
+            graph, placement.assignment,
+            build_blocks=needs_shards and mode == "pallas")
         return Plan(model=self.model, graph=graph, cluster=cluster,
                     fogs=fogs, placement=placement, partitioned=partitioned,
                     config=cfg)
@@ -101,4 +125,5 @@ class Engine:
         return (f"Engine(kind={self.model.kind!r}, "
                 f"cluster={c.cluster_spec or 'custom'}, "
                 f"placement={c.placement!r}, compressor={c.compressor!r}, "
-                f"exchange={c.exchange!r}, executor={c.executor!r})")
+                f"exchange={c.exchange!r}, executor={c.executor!r}, "
+                f"aggregation={c.aggregation!r})")

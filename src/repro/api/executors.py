@@ -15,6 +15,14 @@ out and which simulated pipeline prices its latency:
   "cloud"     single-program numerics, de-facto cloud accounting (full
               WAN upload to a datacenter GPU) — the paper's Fig. 3
               cloud-vs-fog baseline.
+
+Every backend honours the Engine/Session ``aggregation`` knob ("segment_sum"
+| "pallas" | "auto"): the single-program backends swap the model's
+neighborhood aggregation for the whole-graph block-CSR Pallas kernel, the
+mesh backend routes each shard's aggregation through the pre-blocked
+local+halo SpMM (and, with a DAQ compressor, ships the halo quantized and
+dequantizes inside the fused kernel). ``resolve_aggregation`` in
+``runtime.bsp`` defines the fallback/strictness rules.
 """
 from __future__ import annotations
 
@@ -22,11 +30,13 @@ import dataclasses
 from typing import List, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api.registry import EXECUTORS
-from repro.gnn.layers import EdgeList
+from repro.gnn.layers import EdgeList, masked_degree
 from repro.gnn.models import gnn_apply
+from repro.kernels import ops
 from repro.runtime import bsp
 
 
@@ -36,21 +46,32 @@ class ExecutorBackend:
 
     ``pipeline`` names the ``simulation.simulate`` accounting pipeline
     ("multi", "single" or "cloud"); ``run`` returns [V, D] embeddings in
-    original vertex order.
+    original vertex order. ``aggregation`` is the resolved Engine/Session
+    knob (see ``bsp.resolve_aggregation``).
     """
     name: str
     pipeline: str
 
+    #: True for backends whose kernel path reads the per-shard block-CSR
+    #: operands of the PartitionedGraph (built on demand).
+    needs_block_shards = False
+
     def check(self, plan) -> None:
         """Fail fast (helpful error) if this backend cannot run the plan."""
 
+    def wire_format(self, plan, exchange: str, aggregation: str):
+        """(dtype_bytes, row_overhead_bytes) of the per-sync halo payload."""
+        return (4, 0)
+
     def run(self, plan, feats: np.ndarray, assignment: np.ndarray,
-            pg: bsp.PartitionedGraph, exchange: str) -> np.ndarray:
+            pg: bsp.PartitionedGraph, exchange: str,
+            aggregation: str = "segment_sum") -> np.ndarray:
         raise NotImplementedError
 
     def run_many(self, plan, feats_list: Sequence[np.ndarray],
                  assignment: np.ndarray, pg: bsp.PartitionedGraph,
-                 exchange: str) -> List[np.ndarray]:
+                 exchange: str,
+                 aggregation: str = "segment_sum") -> List[np.ndarray]:
         """One executor run over a micro-batch of feature sets.
 
         The default serves each set through ``run`` back-to-back, which
@@ -58,17 +79,62 @@ class ExecutorBackend:
         batching win is priced by ``simulation.simulate(batch_size=B)``);
         backends with a natively batched layout may override.
         """
-        return [self.run(plan, f, assignment, pg, exchange)
+        return [self.run(plan, f, assignment, pg, exchange,
+                         aggregation=aggregation)
                 for f in feats_list]
 
 
+def _graph_block_csr(graph) -> ops.BlockCsr:
+    """Whole-graph block-CSR for the single-program kernel path.
+
+    Cached on the (mutable) ``Graph`` instance — the adjacency is
+    feature-independent, so one prepared operand serves every query and
+    every session over that graph.
+    """
+    csr = getattr(graph, "_block_csr_cache", None)
+    if csr is None:
+        csr = ops.BlockCsr(graph)
+        graph._block_csr_cache = csr
+    return csr
+
+
+def _kernel_aggregate(csr: ops.BlockCsr, kind: str):
+    """The model's ``aggregate=`` hook backed by the Pallas SpMM."""
+
+    def agg_sum(h, edges, h_src=None):
+        src = h if h_src is None else h_src
+        return csr.aggregate_traced(src)
+
+    if kind != "sage":
+        return agg_sum
+
+    def agg_mean(h, edges, h_src=None):
+        deg = masked_degree(edges)
+        return agg_sum(h, edges, h_src) / jnp.maximum(deg, 1.0)[:, None]
+
+    return agg_mean
+
+
 class _SingleProgram(ExecutorBackend):
-    def run(self, plan, feats, assignment, pg, exchange):
+    def run(self, plan, feats, assignment, pg, exchange,
+            aggregation="segment_sum"):
+        # Single-program layout: no cross-fog exchange is involved, so the
+        # kernel path only depends on the model kind.
+        mode = bsp.resolve_aggregation(aggregation, plan.model.kind)
+        aggregate = None
+        if mode == "pallas":
+            aggregate = _kernel_aggregate(_graph_block_csr(plan.graph),
+                                          plan.model.kind)
         return np.asarray(gnn_apply(list(plan.model.params), plan.model.kind,
-                                    feats, EdgeList.from_graph(plan.graph)))
+                                    feats, EdgeList.from_graph(plan.graph),
+                                    aggregate=aggregate))
 
 
 class _MeshBsp(ExecutorBackend):
+    #: this backend aggregates over PartitionedGraph.local_csr/halo_csr
+    #: when the kernel path is active (Engine/Session build them lazily).
+    needs_block_shards = True
+
     def check(self, plan) -> None:
         n = plan.num_fogs
         have = len(jax.devices())
@@ -79,10 +145,26 @@ class _MeshBsp(ExecutorBackend):
                 f"--xla_force_host_platform_device_count={n}, or switch "
                 f"the engine's executor knob to 'sim'")
 
-    def run(self, plan, feats, assignment, pg, exchange):
+    @staticmethod
+    def _halo_quant(plan, exchange: str, aggregation: str) -> bool:
+        """DAQ plans fuse wire dequantization into the halo SpMM (kernel
+        path only): boundary rows cross the collective quantized."""
+        return (bsp.resolve_aggregation(aggregation, plan.model.kind,
+                                        exchange=exchange) == "pallas"
+                and plan.config.compressor.startswith("daq"))
+
+    def wire_format(self, plan, exchange, aggregation):
+        if self._halo_quant(plan, exchange, aggregation):
+            return (1, 8)   # uint8 codes + f32 (scale, min) per row
+        return (4, 0)
+
+    def run(self, plan, feats, assignment, pg, exchange,
+            aggregation="segment_sum"):
         g = dataclasses.replace(plan.graph, features=feats)
-        return bsp.bsp_infer(list(plan.model.params), plan.model.kind, g,
-                             assignment, exchange=exchange)
+        return bsp.bsp_infer(
+            list(plan.model.params), plan.model.kind, g, assignment,
+            exchange=exchange, aggregation=aggregation,
+            halo_quant=self._halo_quant(plan, exchange, aggregation), pg=pg)
 
 
 EXECUTORS.register("sim", _SingleProgram("sim", "multi"))

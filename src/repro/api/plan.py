@@ -64,6 +64,10 @@ class EngineConfig:
     seed: int
     sync_cost: float
     bytes_per_vertex: Optional[float] = None
+    # Shard-local aggregation path: "segment_sum" | "pallas" | "auto"
+    # (auto = the Pallas block-CSR kernels wherever supported on TPU,
+    # segment_sum elsewhere). See runtime.bsp.resolve_aggregation.
+    aggregation: str = "auto"
 
     def with_overrides(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

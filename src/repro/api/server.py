@@ -248,7 +248,9 @@ class Server:
         collected = [sess.collect(r.features) for r in batch]
         embs = backend.run_many(sess.plan, collected,
                                 sess.state.placement.assignment,
-                                sess.partitioned(), sess._exchange.name)
+                                sess.partitioned(backend),
+                                sess._exchange.name,
+                                aggregation=sess._aggregation)
         xbytes = sess.exchange_bytes(backend)
         batch_index = self.num_batches
         self.num_batches += 1

@@ -62,6 +62,7 @@ class Session:
     """Live serving handle for one Plan: ``query``, ``stream``, ``adapt``."""
 
     def __init__(self, plan, *, executor: Optional[str] = None,
+                 aggregation: Optional[str] = None,
                  lam: float = 1.3, theta: float = 0.5,
                  adapt_every: int = 0,
                  accuracy_fn: Optional[Callable[[np.ndarray], float]] = None,
@@ -72,6 +73,16 @@ class Session:
         self._executor = EXECUTORS.resolve(self._executor_key)
         self._compressor = COMPRESSORS.resolve(cfg.compressor)
         self._exchange = EXCHANGES.resolve(cfg.exchange)
+        # Shard-local aggregation path override (else the plan's knob);
+        # validated eagerly — with the exchange context when the session's
+        # backend runs on the mesh — so bad combinations fail at session
+        # creation rather than at the first query.
+        self._aggregation = (cfg.aggregation if aggregation is None
+                             else aggregation)
+        bsp.resolve_aggregation(
+            self._aggregation, plan.model.kind,
+            exchange=self._exchange.name
+            if getattr(self._executor, "needs_block_shards", False) else None)
         self.lam = lam
         self.theta = theta
         self.adapt_every = int(adapt_every)
@@ -99,12 +110,29 @@ class Session:
         """The session's *current* (possibly adapted) placement."""
         return self.state.placement
 
-    def partitioned(self) -> bsp.PartitionedGraph:
-        """Static-shape buffers for the current assignment (cached)."""
-        if self._partitioned is None:
-            self._partitioned = bsp.build_partitioned(
-                self.plan.graph, self.state.placement.assignment)
-        return self._partitioned
+    def _needs_block_shards(self, backend: ExecutorBackend) -> bool:
+        """Whether ``backend`` will read the per-shard block-CSR operands."""
+        return (getattr(backend, "needs_block_shards", False)
+                and bsp.resolve_aggregation(
+                    self._aggregation, self.plan.model.kind,
+                    exchange=self._exchange.name) == "pallas")
+
+    def partitioned(self, backend: Optional[ExecutorBackend] = None
+                    ) -> bsp.PartitionedGraph:
+        """Static-shape buffers for the current assignment (cached).
+
+        The block-CSR shards of the kernel aggregation path are built on
+        demand: if the (given or session) backend needs them and the
+        cached buffers lack them, the layout is rebuilt once with blocks.
+        """
+        backend = self._executor if backend is None else backend
+        need = self._needs_block_shards(backend)
+        pg = self._partitioned
+        if pg is None or (need and pg.local_csr is None):
+            self._partitioned = pg = bsp.build_partitioned(
+                self.plan.graph, self.state.placement.assignment,
+                build_blocks=need)
+        return pg
 
     # -- separately callable query stages -----------------------------------
 
@@ -134,7 +162,8 @@ class Session:
         """Stage 2 (paper step 4): distributed runtime (real numerics)."""
         backend = self.resolve_executor(executor)
         return backend.run(self.plan, feats, self.state.placement.assignment,
-                           self.partitioned(), self._exchange.name)
+                           self.partitioned(backend), self._exchange.name,
+                           aggregation=self._aggregation)
 
     def account(self, executor=None, *,
                 batch_size: int = 1) -> simulation.ServingResult:
@@ -150,12 +179,20 @@ class Session:
                                    batch_size=batch_size)
 
     def exchange_bytes(self, executor=None) -> int:
-        """Per-BSP-sync collective payload (0 off the multi-fog pipeline)."""
+        """Per-BSP-sync collective payload (0 off the multi-fog pipeline).
+
+        Accounts for the wire format the backend actually ships: float32
+        rows on the segment-sum path, uint8 codes + one (scale, min) pair
+        per row when the mesh backend's DAQ-fused kernel path is active.
+        """
         backend = self.resolve_executor(executor)
         if backend.pipeline != "multi":
             return 0
+        dtype_bytes, row_overhead = backend.wire_format(
+            self.plan, self._exchange.name, self._aggregation)
         return self._exchange.bytes_per_sync(self.partitioned(),
-                                             self.plan.graph.feature_dim)
+                                             self.plan.graph.feature_dim,
+                                             dtype_bytes, row_overhead)
 
     def tick(self) -> None:
         """Count one served query and run the ``adapt_every`` schedule."""

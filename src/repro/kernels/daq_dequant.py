@@ -28,6 +28,7 @@ from repro.kernels.gather_aggregate import BLOCK
 
 
 def _dequant_kernel(codes_ref, scales_ref, mins_ref, out_ref):
+    """One (v_tile, f_tile) VMEM tile: out = codes * scale[row] + min[row]."""
     codes = codes_ref[...].astype(jnp.float32)
     out_ref[...] = codes * scales_ref[...][:, None] + mins_ref[...][:, None]
 
@@ -59,6 +60,9 @@ def dequant(codes: jnp.ndarray, scales: jnp.ndarray, mins: jnp.ndarray, *,
 def _dequant_spmm_kernel(cols_ref, mask_ref, blocks_ref, codes_ref,
                          scales_ref, mins_ref, out_ref, *, m: int,
                          block: int):
+    """One (row-block, feature-tile) grid step: the [B, TF] source panel is
+    dequantized in VMEM right before each MXU matmul, so the dense feature
+    table never materializes in HBM."""
     acc = jnp.zeros_like(out_ref)
 
     def body(k, acc):
@@ -82,10 +86,19 @@ def dequant_spmm(blocks: jnp.ndarray, block_cols: jnp.ndarray,
                  scales: jnp.ndarray, mins: jnp.ndarray, *,
                  block: int = BLOCK, f_tile: int = 128,
                  interpret: bool = True) -> jnp.ndarray:
-    """out = A @ dequant(codes): fused aggregation over quantized features."""
+    """out = A @ dequant(codes): fused aggregation over quantized features.
+
+    Same block layout as ``gather_aggregate.block_spmm`` (including the
+    rectangular case: ``codes`` is the source table, any multiple of
+    ``block`` rows covering every ``block_cols`` entry; the output has
+    ``vb * block`` rows). ``codes`` is an unsigned-int array (uint8/16/32),
+    ``scales``/``mins`` are f32[v] row parameters; zero-padded source rows
+    (codes == 0, scale == min == 0) dequantize to exactly 0 and therefore
+    contribute nothing. Output is f32.
+    """
     vb, m, b, _ = blocks.shape
     v, f = codes.shape
-    assert b == block and v == vb * block
+    assert b == block and v % block == 0
     f_tile = min(f_tile, f)
     assert f % f_tile == 0
     grid = (vb, f // f_tile)

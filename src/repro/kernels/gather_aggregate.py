@@ -30,13 +30,40 @@ from jax.experimental import pallas as pl
 BLOCK = 128  # MXU-native tile edge
 
 
+def padded_feature_dim(f: int) -> int:
+    """Feature count the SpMM kernels' f-tiling accepts for ``f`` columns.
+
+    ``f_tile`` is clamped to ``min(128, f)``, so any ``f <= 128`` passes
+    unpadded; wider tables must be a multiple of the 128-lane tile.
+    """
+    return f if f <= 128 else -(-f // 128) * 128
+
+
 def build_block_csr(senders: np.ndarray, receivers: np.ndarray,
                     num_vertices: int, block: int = BLOCK,
                     weights: np.ndarray = None):
     """Host-side: COO edges -> ELL-over-blocks block-CSR.
 
-    Returns (blocks f32[VB, M, B, B], block_cols i32[VB, M],
-    block_mask f32[VB, M], padded_v) with out-rows = receivers.
+    Layout contract (shared by ``block_spmm`` and ``dequant_spmm``):
+
+      * The output-row space is ``receivers`` (``num_vertices`` rows,
+        padded up to ``VB = ceil(num_vertices / block)`` row-blocks).
+      * The source-column space is ``senders`` and may be a *different*
+        index space (e.g. a gathered halo table): column-block ids are
+        ``senders // block``, unbounded by ``num_vertices``. The feature
+        table handed to the SpMM must cover ``(max(senders)//block + 1)
+        * block`` rows (zero-pad to a multiple of ``block``).
+      * Each row-block lists exactly ``M`` tiles (ELL padding): real tiles
+        carry ``block_mask == 1``, padding tiles are all-zero with
+        ``block_mask == 0`` and ``block_cols == 0`` (they multiply the
+        first source panel by a zero tile — harmless but not free).
+      * Duplicate edges accumulate (tile entries count multiplicity), and
+        ``weights`` (f32[E], default 1) scales each edge's contribution —
+        e.g. 1/deg(receiver) bakes mean-aggregation into the adjacency.
+
+    Returns ``(blocks f32[VB, M, B, B], block_cols i32[VB, M],
+    block_mask f32[VB, M], padded_v = VB * block)``. Zero edges are legal
+    and yield a single all-padding tile per row-block (M == 1).
     """
     vb = -(-num_vertices // block)
     padded_v = vb * block
@@ -44,14 +71,16 @@ def build_block_csr(senders: np.ndarray, receivers: np.ndarray,
         weights = np.ones(len(senders), np.float32)
     rb = receivers // block
     cb = senders // block
-    # Unique (row-block, col-block) pairs.
-    key = rb.astype(np.int64) * vb + cb
+    # Unique (row-block, col-block) pairs. The column-block count follows
+    # the senders' index space, which may be wider than the row space.
+    ncb = int(cb.max()) + 1 if len(cb) else 1
+    key = rb.astype(np.int64) * ncb + cb
     uniq, inv = np.unique(key, return_inverse=True)
     nb = len(uniq)
     tiles = np.zeros((nb, block, block), np.float32)
     np.add.at(tiles, (inv, receivers % block, senders % block), weights)
-    tile_rb = (uniq // vb).astype(np.int64)
-    tile_cb = (uniq % vb).astype(np.int32)
+    tile_rb = (uniq // ncb).astype(np.int64)
+    tile_cb = (uniq % ncb).astype(np.int32)
     counts = np.bincount(tile_rb, minlength=vb)
     m = max(1, int(counts.max()))
     blocks = np.zeros((vb, m, block, block), np.float32)
@@ -90,10 +119,18 @@ def block_spmm(blocks: jnp.ndarray, block_cols: jnp.ndarray,
                block_mask: jnp.ndarray, h: jnp.ndarray, *,
                block: int = BLOCK, f_tile: int = 128,
                interpret: bool = True) -> jnp.ndarray:
-    """out = A @ h with A in ELL-block-CSR layout (see build_block_csr)."""
+    """out = A @ h with A in ELL-block-CSR layout (see build_block_csr).
+
+    ``A`` may be rectangular: ``h`` is the *source* table (``v`` rows, any
+    multiple of ``block`` covering every ``block_cols`` entry) while the
+    output has ``vb * block`` rows — the shard-local serving path feeds a
+    local+halo source table that is wider than the shard's own row space.
+    ``h`` must be f32 with ``f % f_tile == 0`` (``f_tile`` is clamped to
+    ``f``, so any ``f <= 128`` needs no feature padding); output is f32.
+    """
     vb, m, b, _ = blocks.shape
     v, f = h.shape
-    assert b == block and v == vb * block, (blocks.shape, h.shape)
+    assert b == block and v % block == 0, (blocks.shape, h.shape)
     f_tile = min(f_tile, f)
     assert f % f_tile == 0, (f, f_tile)
     grid = (vb, f // f_tile)

@@ -16,7 +16,9 @@ import numpy as np
 from repro.gnn.graph import Graph
 from repro.kernels import ref
 from repro.kernels.daq_dequant import dequant, dequant_spmm
-from repro.kernels.gather_aggregate import BLOCK, block_spmm, build_block_csr
+from repro.kernels.gather_aggregate import (BLOCK, block_spmm,
+                                            build_block_csr,
+                                            padded_feature_dim)
 
 
 def _on_tpu() -> bool:
@@ -48,16 +50,28 @@ class BlockCsr:
         out[:v, :f] = h
         return jnp.asarray(out)
 
-    def aggregate(self, h: np.ndarray, interpret: Optional[bool] = None
-                  ) -> np.ndarray:
-        """sum-aggregate: returns [V, F] (unpadded)."""
+    def aggregate_traced(self, h: jnp.ndarray,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+        """sum-aggregate, jnp in / jnp out (traceable inside jit).
+
+        Pads rows to the prepared block grid and features to the kernel's
+        lane multiple with ``jnp.pad``, so it composes with the model's
+        layer functions as a drop-in ``aggregate=`` backend.
+        """
         if interpret is None:
             interpret = not _on_tpu()
         v, f = h.shape
-        hp = self.pad_features(np.asarray(h))
+        f_pad = padded_feature_dim(f)
+        hp = jnp.pad(h.astype(jnp.float32),
+                     ((0, self.padded_v - v), (0, f_pad - f)))
         out = block_spmm(self.blocks, self.cols, self.mask, hp,
                          interpret=interpret)
-        return np.asarray(out)[:v, :f]
+        return out[:v, :f]
+
+    def aggregate(self, h: np.ndarray, interpret: Optional[bool] = None
+                  ) -> np.ndarray:
+        """sum-aggregate: returns [V, F] (unpadded)."""
+        return np.asarray(self.aggregate_traced(jnp.asarray(h), interpret))
 
     def aggregate_quantized(self, codes: np.ndarray, scales: np.ndarray,
                             mins: np.ndarray,

@@ -16,12 +16,13 @@ def block_spmm_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
     blocks:     f32[VB, M, B, B]  dense adjacency tiles (row-block major)
     block_cols: i32[VB, M]        column-block index of each tile
     block_mask: f32[VB, M]        1 for real tiles, 0 for padding
-    h:          f32[VB*B, F]      feature table
+    h:          f32[SB*B, F]      source table (SB >= max col block + 1;
+                                  SB == VB in the square case)
     returns     f32[VB*B, F]
     """
     vb, m, b, _ = blocks.shape
     f = h.shape[1]
-    hb = h.reshape(vb, b, f)
+    hb = h.reshape(-1, b, f)
 
     def row_block(i):
         tiles = blocks[i]                      # [M, B, B]

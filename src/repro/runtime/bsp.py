@@ -17,6 +17,35 @@ TPU/JAX adaptation: fogs = devices along a ``fog`` mesh axis, executed with
 Both produce identical results; tests assert equality against single-device
 execution. Per-partition buffers are padded to common static shapes so the
 whole computation jits once.
+
+Shard-local aggregation runs on one of two numerically equivalent paths,
+selected by the ``aggregation`` knob (plumbed from ``Engine`` through the
+EXECUTORS entries):
+
+  * ``"segment_sum"`` — gather + ``jax.ops.segment_sum`` over the padded
+    COO edge list (the portable baseline).
+  * ``"pallas"``      — the block-CSR Pallas kernels: each shard's
+    adjacency is pre-blocked at ``build_partitioned`` time into *two*
+    ELL-block-CSR operands — one over the local slot space and one over
+    the gathered halo table — and the per-layer aggregate becomes
+    ``block_spmm(local) + block_spmm(halo)`` (MXU matmuls instead of
+    scatter-adds). When the serving plan compresses uploads with DAQ, the
+    halo rows additionally cross the collective *quantized* (uint8 codes
+    + per-row scale/min) and are dequantized inside the fused
+    ``dequant_spmm`` kernel, shrinking the BSP wire term by ~4x.
+  * ``"auto"``        — ``"pallas"`` wherever it is supported *and* the
+    program runs on a real TPU backend (off-TPU the kernels execute in
+    interpret mode, which is only useful for correctness); otherwise
+    ``"segment_sum"``.
+
+The kernel path supports the sum/mean aggregations of GCN and GraphSAGE
+under the ``"halo"`` exchange; GAT's attention-weighted aggregation and the
+``"allgather"`` straw-man stay on ``segment_sum`` (requesting ``"pallas"``
+for those raises, ``"auto"`` silently falls back).
+
+Buffer conventions: all feature math is float32; padded vertex rows, edge
+slots, boundary rows and ELL tiles are zero-filled and masked (``*_mask``
+arrays, 1.0 = real), so every code path may blindly multiply-accumulate.
 """
 from __future__ import annotations
 
@@ -36,7 +65,91 @@ except AttributeError:  # older releases keep it under experimental
 
 from repro.api.registry import EXCHANGES
 from repro.gnn.graph import Graph
-from repro.gnn.layers import EdgeList, LAYER_FNS
+from repro.gnn.layers import EdgeList, LAYER_FNS, masked_degree
+from repro.kernels.daq_dequant import dequant_spmm
+from repro.kernels.gather_aggregate import (BLOCK, block_spmm,
+                                            build_block_csr,
+                                            padded_feature_dim)
+
+#: legal values of the Engine/Session ``aggregation`` knob.
+AGGREGATIONS = ("segment_sum", "pallas", "auto")
+
+#: GNN kinds whose neighborhood aggregation is a static (weighted) sum and
+#: can therefore be pre-blocked into an SpMM. GAT re-weights edges per layer
+#: with attention, so its aggregation stays on segment_sum.
+KERNEL_KINDS = ("gcn", "sage")
+
+
+def resolve_aggregation(mode: str, kind: str, *,
+                        exchange: Optional[str] = None) -> str:
+    """Resolve the ``aggregation`` knob to a concrete path for one run.
+
+    ``exchange=None`` means "no cross-fog exchange involved" (the
+    single-program executors). ``"pallas"`` is strict — unsupported
+    combinations raise; ``"auto"`` degrades to ``"segment_sum"`` off-TPU
+    or wherever the kernels do not apply.
+    """
+    if mode not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {mode!r}; available: "
+                         f"{', '.join(AGGREGATIONS)}")
+    supported = kind in KERNEL_KINDS and exchange in (None, "halo")
+    if mode == "pallas":
+        if kind not in KERNEL_KINDS:
+            raise ValueError(
+                f"aggregation='pallas' supports kinds {KERNEL_KINDS} "
+                f"(static-sum aggregation); {kind!r} re-weights edges per "
+                f"layer — use aggregation='segment_sum' or 'auto'")
+        if exchange is not None and exchange != "halo":
+            raise ValueError(
+                "aggregation='pallas' requires the 'halo' exchange (the "
+                f"block-CSR shards are built over the halo table), got "
+                f"exchange={exchange!r}")
+        return "pallas"
+    if mode == "segment_sum":
+        return "segment_sum"
+    on_tpu = jax.default_backend() == "tpu"
+    return "pallas" if (supported and on_tpu) else "segment_sum"
+
+
+@dataclasses.dataclass
+class BlockShardCsr:
+    """Per-shard ELL-block-CSR adjacency, stacked over all partitions.
+
+    One entry per sender index space: tile ``[p, i, m]`` scatters source
+    rows ``cols[p, i, m]*B .. +B`` of that space into local output rows
+    ``i*B .. +B`` of partition ``p``. ``mask`` is 1.0 for real tiles, 0.0
+    for ELL padding (all-zero tiles pointing at source block 0). All
+    partitions share one ``M`` (max tiles per row-block across shards).
+    """
+    blocks: np.ndarray   # f32[n, VB, M, B, B]
+    cols: np.ndarray     # i32[n, VB, M]
+    mask: np.ndarray     # f32[n, VB, M]
+    src_rows: int        # padded source-table rows (multiple of B)
+    out_rows: int        # VB * B (>= slots; slice back to slots)
+
+
+def _stack_block_shards(edge_sets, out_size: int, src_size: int,
+                        block: int = BLOCK) -> BlockShardCsr:
+    """Build one block-CSR per partition and ELL-pad them to a common M."""
+    built = [build_block_csr(s, r, out_size, block) for s, r in edge_sets]
+    m = max(b.shape[1] for b, _, _, _ in built)
+    vb = built[0][0].shape[0]
+    n = len(built)
+    blocks = np.zeros((n, vb, m, block, block), np.float32)
+    cols = np.zeros((n, vb, m), np.int32)
+    mask = np.zeros((n, vb, m), np.float32)
+    for p, (b, c, k, _) in enumerate(built):
+        mp = b.shape[1]
+        blocks[p, :, :mp] = b
+        cols[p, :, :mp] = c
+        mask[p, :, :mp] = k
+    src_rows = int(-(-src_size // block) * block)
+    # The SpMM kernels index the source table by block with no bounds
+    # check — guarantee here (where cols are concrete) that a table padded
+    # to src_rows covers every referenced column block.
+    assert int(cols.max()) < src_rows // block, (cols.max(), src_rows)
+    return BlockShardCsr(blocks=blocks, cols=cols, mask=mask,
+                         src_rows=src_rows, out_rows=vb * block)
 
 
 @dataclasses.dataclass
@@ -63,15 +176,45 @@ class PartitionedGraph:
     # (part[v], slot[v]).
     part_of: np.ndarray         # [V]
     slot_of: np.ndarray         # [V]
+    # Pre-blocked shard-local adjacency for the Pallas aggregation path:
+    # sum-aggregate = local_csr @ h_local + halo_csr @ gathered_halo.
+    # None when build_partitioned ran with build_blocks=False.
+    local_csr: Optional[BlockShardCsr] = None
+    halo_csr: Optional[BlockShardCsr] = None
 
     def unpermute(self, out: np.ndarray) -> np.ndarray:
         """[n, P, D] stacked partition outputs -> [V, D] original order."""
         return out[self.part_of, self.slot_of]
 
+    def with_features(self, features: np.ndarray) -> "PartitionedGraph":
+        """Same layout (and block-CSR shards), fresh per-vertex features.
+
+        Serving calls this once per query — the partition structure is
+        feature-independent, so only the [n, P, F] table is rebuilt.
+        """
+        features = np.asarray(features, np.float32)
+        feats = np.zeros((self.n, self.slots, features.shape[1]), np.float32)
+        feats[self.part_of, self.slot_of] = features
+        return dataclasses.replace(self, feats=feats)
+
 
 def build_partitioned(g: Graph, assignment: np.ndarray,
-                      pad_multiple: int = 8) -> PartitionedGraph:
-    """Lay the graph out per-partition with static padded shapes."""
+                      pad_multiple: int = 8,
+                      build_blocks: bool = True) -> PartitionedGraph:
+    """Lay the graph out per-partition with static padded shapes.
+
+    Padding conventions: every partition shares one slot count P (max
+    partition size rounded up to ``pad_multiple``), one edge capacity E
+    and one boundary capacity B; padded rows/edges carry zeroed features
+    and 0.0 masks. Empty partitions (``assignment`` skipping a part id)
+    and single-vertex shards are legal — they simply pad everywhere.
+
+    ``build_blocks=True`` additionally pre-blocks each shard's adjacency
+    into the two ELL-block-CSR operands of the Pallas aggregation path
+    (``local_csr`` over the P local slots, ``halo_csr`` over the [n*B]
+    gathered halo table); pass False to skip that host-side work when only
+    the segment-sum path will run.
+    """
     assignment = np.asarray(assignment, np.int64)
     n = int(assignment.max()) + 1
     parts: List[np.ndarray] = [np.flatnonzero(assignment == p) for p in range(n)]
@@ -115,6 +258,7 @@ def build_partitioned(g: Graph, assignment: np.ndarray,
     edge_mask = np.zeros((n, e_pad), np.float32)
     boundary_rows = np.zeros((n, b_pad), np.int32)
     boundary_mask = np.zeros((n, b_pad), np.float32)
+    local_edges, halo_edges = [], []
     for p in range(n):
         eids = edge_lists[p]
         s, r = g.senders[eids], g.receivers[eids]
@@ -135,12 +279,23 @@ def build_partitioned(g: Graph, assignment: np.ndarray,
         bs = boundary_ids[p]
         boundary_rows[p, :len(bs)] = slot_of[bs]
         boundary_mask[p, :len(bs)] = 1.0
+        # Unpadded per-shard edge splits for the block-CSR (kernel) path:
+        # local senders read the shard's own rows, remote senders read the
+        # gathered [n*B] halo table.
+        local_edges.append((slot_of[s[local]], slot_of[r[local]]))
+        halo_edges.append((part_of[s[~local]] * b_pad + halo_slot[s[~local]],
+                           slot_of[r[~local]]))
 
     self_g = np.zeros((n, slots), np.int32)
     self_h = np.zeros((n, slots), np.int32)
     for p in range(n):
         self_g[p] = p * slots + np.arange(slots)
         self_h[p] = np.arange(slots)  # local rows in combined halo table
+
+    local_csr = halo_csr = None
+    if build_blocks:
+        local_csr = _stack_block_shards(local_edges, slots, slots)
+        halo_csr = _stack_block_shards(halo_edges, slots, n * b_pad)
 
     return PartitionedGraph(
         n=n, slots=slots, edges_per_part=e_pad, boundary_slots=b_pad,
@@ -149,7 +304,8 @@ def build_partitioned(g: Graph, assignment: np.ndarray,
         receivers_local=receivers_local, edge_mask=edge_mask,
         boundary_rows=boundary_rows, boundary_mask=boundary_mask,
         self_senders_global=self_g, self_senders_halo=self_h,
-        part_of=part_of, slot_of=slot_of)
+        part_of=part_of, slot_of=slot_of,
+        local_csr=local_csr, halo_csr=halo_csr)
 
 
 def _layer_edges(pg: PartitionedGraph, senders, kind: str, self_senders,
@@ -164,65 +320,176 @@ def _layer_edges(pg: PartitionedGraph, senders, kind: str, self_senders,
     return EdgeList(senders, receivers, emask, pg.slots)
 
 
+def _wire_quantize(h: jnp.ndarray, levels: float = 255.0):
+    """Per-row linear quantization of the halo wire payload (jit-safe).
+
+    Mirrors ``compression._quantize_rows`` at 8 bits: uint8 codes plus one
+    f32 (scale, min) pair per row. All-zero (masked padding) rows get
+    code 0 / scale ~0 / min 0 and dequantize to exactly 0.
+    """
+    mins = h.min(axis=1)
+    scales = jnp.maximum(h.max(axis=1) - mins, 1e-12) / levels
+    codes = jnp.clip(jnp.round((h - mins[:, None]) / scales[:, None]),
+                     0, levels).astype(jnp.uint8)
+    return codes, scales, mins
+
+
+def _kernel_pad(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """Zero-pad a source table to the kernel grid: ``rows`` source rows
+    (multiple of BLOCK) and a feature count the f-tiling accepts."""
+    v, f = x.shape
+    return jnp.pad(x, ((0, rows - v), (0, padded_feature_dim(f) - f)))
+
+
 def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
-              axis: str = "fog", exchange: str = "halo") -> jnp.ndarray:
-    """Distributed K-layer GNN inference; returns [n, P, D] device outputs."""
+              axis: str = "fog", exchange: str = "halo",
+              aggregation: str = "segment_sum",
+              halo_quant: bool = False) -> jnp.ndarray:
+    """Distributed K-layer GNN inference; returns [n, P, D] device outputs.
+
+    ``aggregation`` selects the shard-local aggregation path (see module
+    docstring); ``halo_quant=True`` (kernel path only) quantizes the halo
+    rows to uint8 *before* the all_gather and dequantizes them inside the
+    fused ``dequant_spmm`` kernel — the wire carries 1 byte/feature plus
+    8 bytes/row instead of 4 bytes/feature.
+    """
     _, layer_fn = LAYER_FNS[kind]
     nlayers = len(params)
+    mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+    use_kernels = mode == "pallas"
+    if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
+        raise ValueError(
+            "aggregation='pallas' needs the block-CSR shards; rebuild the "
+            "PartitionedGraph with build_partitioned(..., build_blocks=True)")
+    if halo_quant and not use_kernels:
+        raise ValueError("halo_quant requires the 'pallas' aggregation path")
+    interpret = jax.default_backend() != "tpu"
 
     def shard_fn(feats, vmask, s_g, s_h, recv, emask, brows, bmask,
-                 self_g, self_h):
+                 self_g, self_h, *kops):
         # shard_map blocks: feats [1, P, F] etc. — squeeze the leading axis.
         h = feats[0]
         vm, sg, sh = vmask[0], s_g[0], s_h[0]
         rc, em = recv[0], emask[0]
         br, bm = brows[0], bmask[0]
         selg, selh = self_g[0], self_h[0]
+        if use_kernels:
+            lblk, lcol, lmsk, hblk, hcol, hmsk = (a[0] for a in kops)
         for li, p in enumerate(params):
             act_last = li == nlayers - 1
+            kwargs = {}
             if exchange == "allgather":
                 h_all = jax.lax.all_gather(h, axis)          # [n, P, F]
                 h_src = h_all.reshape(-1, h.shape[-1])
                 edges = _layer_edges(pg, sg, kind, selg, rc, em, vm)
             elif exchange == "halo":
                 hb = h[br] * bm[:, None]                      # [B, F]
-                halo = jax.lax.all_gather(hb, axis)           # [n, B, F]
-                h_src = jnp.concatenate(
-                    [h, halo.reshape(-1, h.shape[-1])], axis=0)
                 edges = _layer_edges(pg, sh, kind, selh, rc, em, vm)
+                if use_kernels:
+                    # Kernel path: keep local and halo operands separate —
+                    # sum-aggregate = local SpMM + halo SpMM — instead of
+                    # concatenating one combined gather table.
+                    f = h.shape[-1]
+                    h_src = None
+                    if halo_quant:
+                        codes, sc, mn = _wire_quantize(hb)
+                        codes = jax.lax.all_gather(
+                            codes, axis).reshape(-1, f)
+                        # One collective for both row parameters.
+                        sm = jax.lax.all_gather(
+                            jnp.stack([sc, mn], axis=-1), axis).reshape(-1, 2)
+                        rows = pg.halo_csr.src_rows
+                        codes = _kernel_pad(codes, rows)
+                        sm = jnp.pad(sm, ((0, rows - sm.shape[0]), (0, 0)))
+                        sc, mn = sm[:, 0], sm[:, 1]
+
+                        def halo_agg(_f=f):
+                            return dequant_spmm(
+                                hblk, hcol, hmsk, codes, sc, mn,
+                                interpret=interpret)[:pg.slots, :_f]
+                    else:
+                        halo = jax.lax.all_gather(
+                            hb, axis).reshape(-1, h.shape[-1])
+                        halo = _kernel_pad(halo, pg.halo_csr.src_rows)
+
+                        def halo_agg(_f=f):
+                            return block_spmm(
+                                hblk, hcol, hmsk, halo,
+                                interpret=interpret)[:pg.slots, :_f]
+
+                    def kernel_sum(h_loc, edges_, h_src_=None, _f=f,
+                                   _halo_agg=halo_agg):
+                        loc = _kernel_pad(h_loc, pg.local_csr.src_rows)
+                        out = block_spmm(lblk, lcol, lmsk, loc,
+                                         interpret=interpret)
+                        return out[:pg.slots, :_f] + _halo_agg()
+
+                    if kind == "sage":   # SAGE aggregates the mean
+                        def kernel_agg(h_loc, edges_, h_src_=None,
+                                       _sum=kernel_sum):
+                            deg = masked_degree(edges_)
+                            return (_sum(h_loc, edges_, h_src_)
+                                    / jnp.maximum(deg, 1.0)[:, None])
+                    else:
+                        kernel_agg = kernel_sum
+                    kwargs["aggregate"] = kernel_agg
+                else:
+                    halo = jax.lax.all_gather(hb, axis)       # [n, B, F]
+                    h_src = jnp.concatenate(
+                        [h, halo.reshape(-1, h.shape[-1])], axis=0)
             else:
                 raise ValueError(exchange)
             if act_last:
-                h = layer_fn(p, h, edges, activation=None, h_src=h_src)
+                h = layer_fn(p, h, edges, activation=None, h_src=h_src,
+                             **kwargs)
             else:
-                h = layer_fn(p, h, edges, h_src=h_src)
+                h = layer_fn(p, h, edges, h_src=h_src, **kwargs)
             h = h * vm[:, None]  # keep padded rows at zero
         return h[None]
 
     spec = P(axis, None, None)
     spec2 = P(axis, None)
-    fn = jax.jit(_shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
-                  spec2, spec2),
-        out_specs=spec))
-    return fn(jnp.asarray(pg.feats), jnp.asarray(pg.vertex_mask),
-              jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
-              jnp.asarray(pg.receivers_local), jnp.asarray(pg.edge_mask),
-              jnp.asarray(pg.boundary_rows), jnp.asarray(pg.boundary_mask),
-              jnp.asarray(pg.self_senders_global),
-              jnp.asarray(pg.self_senders_halo))
+    in_specs = [spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
+                spec2, spec2]
+    operands = [jnp.asarray(pg.feats), jnp.asarray(pg.vertex_mask),
+                jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
+                jnp.asarray(pg.receivers_local), jnp.asarray(pg.edge_mask),
+                jnp.asarray(pg.boundary_rows), jnp.asarray(pg.boundary_mask),
+                jnp.asarray(pg.self_senders_global),
+                jnp.asarray(pg.self_senders_halo)]
+    if use_kernels:
+        for csr in (pg.local_csr, pg.halo_csr):
+            for arr in (csr.blocks, csr.cols, csr.mask):
+                operands.append(jnp.asarray(arr))
+                in_specs.append(P(axis, *([None] * (arr.ndim - 1))))
+    smap_kw = {}
+    if use_kernels:
+        # pallas_call has no shard_map replication rule; every operand and
+        # output here is explicitly partitioned, so the check adds nothing.
+        smap_kw["check_rep"] = False
+    fn = jax.jit(_shard_map(shard_fn, mesh=mesh, in_specs=tuple(in_specs),
+                            out_specs=spec, **smap_kw))
+    return fn(*operands)
 
 
 def bsp_infer(params, kind: str, g: Graph, assignment: np.ndarray,
               mesh: Optional[Mesh] = None, exchange: str = "halo",
-              axis: str = "fog") -> np.ndarray:
+              axis: str = "fog", aggregation: str = "segment_sum",
+              halo_quant: bool = False,
+              pg: Optional[PartitionedGraph] = None) -> np.ndarray:
     """End-to-end distributed inference -> [V, D] in original vertex order.
 
     With ``mesh=None`` a mesh over all available devices is built; the
-    number of partitions must equal the mesh size.
+    number of partitions must equal the mesh size. ``pg`` reuses prebuilt
+    partition buffers (the features are refreshed from ``g``), which is
+    what the serving path does per query.
     """
-    pg = build_partitioned(g, assignment)
+    if pg is None:
+        mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+        pg = build_partitioned(g, assignment,
+                               build_blocks=mode == "pallas")
+    else:
+        pg = pg.with_features(g.features)
     if mesh is None:
         devs = np.array(jax.devices()[:pg.n])
         if len(devs) != pg.n:
@@ -231,16 +498,25 @@ def bsp_infer(params, kind: str, g: Graph, assignment: np.ndarray,
                 f"{len(jax.devices())} — run under "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count={pg.n}")
         mesh = Mesh(devs, (axis,))
-    out = np.asarray(bsp_apply(params, kind, pg, mesh, axis, exchange))
+    out = np.asarray(bsp_apply(params, kind, pg, mesh, axis, exchange,
+                               aggregation=aggregation,
+                               halo_quant=halo_quant))
     return pg.unpermute(out)
 
 
 def exchange_bytes(pg: PartitionedGraph, feature_dim: int,
-                   exchange: str, dtype_bytes: int = 4) -> int:
-    """Collective payload per BSP sync (for the communication roofline)."""
+                   exchange: str, dtype_bytes: int = 4,
+                   row_overhead_bytes: int = 0) -> int:
+    """Collective payload per BSP sync (for the communication roofline).
+
+    ``dtype_bytes``/``row_overhead_bytes`` describe the wire format: the
+    float32 exchange is (4, 0); the DAQ-fused kernel path ships uint8
+    codes plus one f32 (scale, min) pair per row, i.e. (1, 8).
+    """
+    per_row = feature_dim * dtype_bytes + row_overhead_bytes
     if exchange == "allgather":
-        return pg.n * pg.slots * feature_dim * dtype_bytes
-    return pg.n * pg.boundary_slots * feature_dim * dtype_bytes
+        return pg.n * pg.slots * per_row
+    return pg.n * pg.boundary_slots * per_row
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,8 +525,10 @@ class ExchangeSpec:
     name: str
 
     def bytes_per_sync(self, pg: PartitionedGraph, feature_dim: int,
-                       dtype_bytes: int = 4) -> int:
-        return exchange_bytes(pg, feature_dim, self.name, dtype_bytes)
+                       dtype_bytes: int = 4,
+                       row_overhead_bytes: int = 0) -> int:
+        return exchange_bytes(pg, feature_dim, self.name, dtype_bytes,
+                              row_overhead_bytes)
 
 
 EXCHANGES.register("halo", ExchangeSpec("halo"))
