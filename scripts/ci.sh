@@ -12,3 +12,6 @@ PYTHONPATH=src python benchmarks/throughput.py --smoke
 # Aggregation roofline: the Pallas kernel paths must match segment_sum on
 # every shard (exact for the float path, quantization-bounded for DAQ).
 PYTHONPATH=src python benchmarks/roofline.py --smoke
+# Dynamic-graph updates: incremental apply_delta must stay bit-identical
+# to a full Engine.compile of the mutated graph.
+PYTHONPATH=src python benchmarks/updates.py --smoke

@@ -21,7 +21,12 @@ _LAZY = {
     "Server": "repro.api.server",
     "Request": "repro.api.server",
     "Response": "repro.api.server",
+    "UpdateResponse": "repro.api.server",
+    "GraphDelta": "repro.api.updates",
+    "UpdateRequest": "repro.api.updates",
+    "UpdateReport": "repro.api.updates",
     "traces": "repro.api.traces",   # submodule: resolves to the module
+    "updates": "repro.api.updates",  # submodule: resolves to the module
 }
 
 __all__ = sorted(["Registry", "UnknownComponentError", "ALL_REGISTRIES",

@@ -14,13 +14,17 @@ keys) changes no other code.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
 
 from repro.api import executors as _executors  # noqa: F401  (registers backends)
 from repro.api.registry import (COMPRESSORS, EXCHANGES, EXECUTORS,
                                 PARTITIONERS, PLACEMENTS)
 from repro.api.plan import EngineConfig, ModelSpec, Plan, as_model
-from repro.core import simulation
+from repro.api.updates import GraphDelta, UpdateReport
+from repro.core import incremental, simulation
 from repro.gnn.graph import Graph
 from repro.runtime import bsp
 
@@ -49,6 +53,10 @@ class Engine:
       bytes_per_vertex: per-vertex upload size for planning (defaults to
         the graph's raw float64 feature bytes).
       seed: profiling/placement RNG seed.
+      update_max_imbalance / update_max_cut_growth: repair-quality
+        thresholds for ``apply_delta`` — when the incrementally repaired
+        partitioning exceeds either, the delta triggers a full recompile
+        instead (overridable per call).
     """
 
     def __init__(self, model, cluster: Union[str, "simulation.FogCluster"]
@@ -58,7 +66,9 @@ class Engine:
                  executor: str = "sim", hidden: int = 64, seed: int = 0,
                  sync_cost: float = simulation.DEFAULT_SYNC_COST,
                  bytes_per_vertex: Optional[float] = None,
-                 aggregation: str = "auto"):
+                 aggregation: str = "auto",
+                 update_max_imbalance: float = 2.0,
+                 update_max_cut_growth: float = 1.5):
         self.model: ModelSpec = as_model(model)
         self.cluster = cluster
         # Resolve every stage eagerly so bad keys fail at construction.
@@ -86,7 +96,9 @@ class Engine:
             network=network,
             cluster_spec=cluster if isinstance(cluster, str) else None,
             hidden=hidden, seed=seed, sync_cost=sync_cost,
-            bytes_per_vertex=bytes_per_vertex, aggregation=aggregation)
+            bytes_per_vertex=bytes_per_vertex, aggregation=aggregation,
+            update_max_imbalance=update_max_imbalance,
+            update_max_cut_growth=update_max_cut_growth)
 
     def compile(self, graph: Graph) -> Plan:
         """Setup phase (paper steps 1-2): profile, register, plan, freeze."""
@@ -119,6 +131,178 @@ class Engine:
         return Plan(model=self.model, graph=graph, cluster=cluster,
                     fogs=fogs, placement=placement, partitioned=partitioned,
                     config=cfg)
+
+    @classmethod
+    def from_plan(cls, plan: Plan) -> "Engine":
+        """Reconstruct the Engine a plan was compiled with (same knobs).
+
+        Used by ``Session.update`` to repair or recompile without the
+        caller having kept the original Engine around.  Plans compiled
+        from a cluster-spec string rebuild the cluster against whatever
+        graph they next compile; plans compiled from a prebuilt
+        ``FogCluster`` reuse that instance.
+        """
+        cfg = plan.config
+        return cls(plan.model,
+                   cfg.cluster_spec if cfg.cluster_spec else plan.cluster,
+                   network=cfg.network, partitioner=cfg.partitioner,
+                   placement=cfg.placement, compressor=cfg.compressor,
+                   exchange=cfg.exchange, executor=cfg.executor,
+                   hidden=cfg.hidden, seed=cfg.seed,
+                   sync_cost=cfg.sync_cost,
+                   bytes_per_vertex=cfg.bytes_per_vertex,
+                   aggregation=cfg.aggregation,
+                   update_max_imbalance=cfg.update_max_imbalance,
+                   update_max_cut_growth=cfg.update_max_cut_growth)
+
+    # -- dynamic-graph updates ----------------------------------------------
+
+    def _recompile(self, graph: Graph) -> Plan:
+        """Full setup phase against a mutated graph (the fallback path)."""
+        if isinstance(self.cluster, str):
+            return self.compile(graph)
+        # A prebuilt FogCluster was profiled against the old graph; rebind
+        # it to the mutated one so wire bytes / ground truth stay honest.
+        old = self.cluster
+        self.cluster = dataclasses.replace(old, graph=graph,
+                                           feature_dim=graph.feature_dim)
+        try:
+            return self.compile(graph)
+        finally:
+            self.cluster = old
+
+    def apply_delta(self, plan: Plan,
+                    delta: Union[GraphDelta, Sequence[GraphDelta]], *,
+                    assignment: Optional[np.ndarray] = None,
+                    max_imbalance: Optional[float] = None,
+                    max_cut_growth: Optional[float] = None,
+                    force: Optional[str] = None) -> Plan:
+        """Absorb a graph mutation into ``plan`` without recomputing the
+        world (paper §III-E workload adaptation, ROADMAP "Dynamic graphs").
+
+        The repair path keeps the plan's profiled fog metadata and
+        partition -> fog mapping, greedily assigns new vertices into the
+        existing partitions (min-cut-aware, capacity-bounded), rebuilds
+        only the *dirty* shards' block-CSR operands and halo exchange
+        maps, and re-prices the placement estimates for the mutated
+        topology.  When the repaired partitioning degrades past the
+        thresholds — imbalance above ``max_imbalance`` x the pre-update
+        imbalance (floored at a balanced baseline) or edge-cut fraction
+        above ``max_cut_growth`` x the pre-update cut — the full compile
+        pipeline runs instead.
+
+        Args:
+          plan: the plan to update (left untouched; a new Plan returns).
+          delta: one ``GraphDelta`` or a sequence applied in order (each
+            delta addresses the graph produced by the previous one).
+          assignment: base vertex -> fog assignment to repair (defaults to
+            ``plan.placement.assignment``; sessions pass their adapted
+            assignment).
+          force: "incremental" skips the threshold check, "recompile"
+            skips the repair.
+
+        Returns a Plan with ``provenance`` of "incremental" or "recompile"
+        and an ``update_report`` describing what happened; empty deltas
+        return an equivalent plan with mode "noop".
+        """
+        cfg = plan.config
+        deltas = [delta] if isinstance(delta, GraphDelta) else list(delta)
+        if force not in (None, "incremental", "recompile"):
+            raise ValueError(f"force must be None, 'incremental' or "
+                             f"'recompile', got {force!r}")
+        max_imbalance = (cfg.update_max_imbalance if max_imbalance is None
+                         else max_imbalance)
+        max_cut_growth = (cfg.update_max_cut_growth if max_cut_growth is None
+                          else max_cut_growth)
+        base = (plan.placement.assignment if assignment is None
+                else np.asarray(assignment, np.int64))
+        n = plan.num_fogs
+        dp = incremental.plan_delta(plan.graph, base, deltas, n)
+        report_kw = dict(num_deltas=len(deltas), num_partitions=n,
+                         imbalance_before=dp.imbalance_before,
+                         imbalance=dp.imbalance,
+                         cut_fraction_before=dp.cut_fraction_before,
+                         cut_fraction_after=dp.cut_fraction_after,
+                         **dp.counts)
+
+        if (not dp.structural and dp.counts["feature_upserts"] == 0
+                and np.array_equal(base, plan.placement.assignment)
+                and force != "recompile"):
+            report = UpdateReport(mode="noop", **report_kw)
+            return dataclasses.replace(plan, provenance="incremental",
+                                       update_report=report)
+
+        recompile_reason = ""
+        if force != "incremental" and dp.structural:
+            # Both thresholds bound *degradation* relative to the plan
+            # being repaired (floored at a perfectly balanced baseline):
+            # IEP sizes partitions to heterogeneous capability, so a
+            # skewed-but-intended layout must not trip the knob by itself.
+            imbalance_limit = max_imbalance * max(1.0, dp.imbalance_before)
+            if dp.imbalance > imbalance_limit:
+                recompile_reason = (f"imbalance {dp.imbalance:.2f} > "
+                                    f"{max_imbalance:.2f} x "
+                                    f"{max(1.0, dp.imbalance_before):.2f}")
+            elif dp.cut_fraction_after > max_cut_growth * max(
+                    dp.cut_fraction_before, 1e-9):
+                recompile_reason = (
+                    f"cut fraction {dp.cut_fraction_after:.3f} > "
+                    f"{max_cut_growth:.2f} x {dp.cut_fraction_before:.3f}")
+        if force == "recompile":
+            recompile_reason = "forced"
+        if recompile_reason:
+            plan2 = self._recompile(dp.graph)
+            report = UpdateReport(mode="recompile", reason=recompile_reason,
+                                  **report_kw)
+            return dataclasses.replace(plan2, provenance="recompile",
+                                       update_report=report)
+
+        # plan.partitioned was laid out for plan.placement.assignment; it
+        # is only a valid reuse source (for clean-shard tiles, or for the
+        # feature-only with_features fast path) when the repair started
+        # from that same assignment. A session that adapted migrates
+        # vertices without touching plan.partitioned, so its repairs must
+        # rebuild from scratch for the adapted assignment.
+        base_is_plan = np.array_equal(base, plan.placement.assignment)
+        needs_shards = getattr(self._executor, "needs_block_shards", False)
+        mode = bsp.resolve_aggregation(
+            cfg.aggregation, self.model.kind,
+            exchange=cfg.exchange if needs_shards else None)
+        build_blocks = (needs_shards and mode == "pallas"
+                        ) or plan.partitioned.local_csr is not None
+        if not dp.structural and base_is_plan:
+            # Feature-only: same topology, same layout, same block shards —
+            # only the per-partition feature table is refreshed.
+            partitioned = plan.partitioned.with_features(dp.graph.features)
+            dirty_l = dirty_h = ()
+        elif not dp.structural:
+            # Feature-only delta on an adapted assignment: the delta
+            # dirtied nothing, but the layout must match the adapted
+            # assignment, which plan.partitioned does not.
+            partitioned = bsp.build_partitioned(
+                dp.graph, dp.assignment, build_blocks=build_blocks, n=n)
+            dirty_l = dirty_h = ()
+        else:
+            partitioned = bsp.build_partitioned(
+                dp.graph, dp.assignment, build_blocks=build_blocks, n=n,
+                prev=plan.partitioned if base_is_plan else None,
+                dirty_local=dp.dirty_local, dirty_halo=dp.dirty_halo)
+            dirty_l = tuple(int(p) for p in dp.dirty_local)
+            dirty_h = tuple(int(p) for p in dp.dirty_halo)
+        placement = incremental.refresh_placement(
+            dp.graph, dp.assignment, plan.placement.mapping, plan.fogs,
+            bytes_per_vertex=cfg.bytes_per_vertex,
+            k_layers=self.model.num_layers,
+            sync_cost=plan.cluster.sync_cost)
+        cluster = dataclasses.replace(plan.cluster, graph=dp.graph,
+                                      feature_dim=dp.graph.feature_dim)
+        report = UpdateReport(
+            mode="features" if not dp.structural else "incremental",
+            dirty_local=dirty_l, dirty_halo=dirty_h, **report_kw)
+        return Plan(model=self.model, graph=dp.graph, cluster=cluster,
+                    fogs=plan.fogs, placement=placement,
+                    partitioned=partitioned, config=cfg,
+                    provenance="incremental", update_report=report)
 
     def __repr__(self) -> str:
         c = self.config

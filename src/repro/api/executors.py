@@ -27,6 +27,7 @@ dequantizes inside the fused kernel). ``resolve_aggregation`` in
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Sequence
 
 import jax
@@ -115,6 +116,21 @@ def _kernel_aggregate(csr: ops.BlockCsr, kind: str):
     return agg_mean
 
 
+@functools.partial(jax.jit, static_argnames=("kind", "num_vertices"))
+def _batched_gnn_apply(params, kind, stacked, senders, receivers, mask,
+                       num_vertices):
+    """vmap of the K-layer forward over a [B, V, F] feature stack.
+
+    One traced call per (graph, batch-size) instead of B dispatches; the
+    per-example computation is the same op sequence as ``gnn_apply``, so
+    results are bit-identical to the serial loop (asserted in
+    tests/test_updates.py and by test_server's batched==serial suite).
+    ``num_vertices`` is static (segment_sum needs a concrete count).
+    """
+    edges = EdgeList(senders, receivers, mask, num_vertices)
+    return jax.vmap(lambda h: gnn_apply(params, kind, h, edges))(stacked)
+
+
 class _SingleProgram(ExecutorBackend):
     def run(self, plan, feats, assignment, pg, exchange,
             aggregation="segment_sum"):
@@ -128,6 +144,30 @@ class _SingleProgram(ExecutorBackend):
         return np.asarray(gnn_apply(list(plan.model.params), plan.model.kind,
                                     feats, EdgeList.from_graph(plan.graph),
                                     aggregate=aggregate))
+
+    def run_many(self, plan, feats_list, assignment, pg, exchange,
+                 aggregation="segment_sum"):
+        """Batched fast path: stack the micro-batch and run one traced
+        call (``vmap`` over the batch axis) instead of B dispatches.
+
+        Falls back to the serial base loop for singleton batches, for the
+        Pallas kernel path (the whole-graph block-CSR kernel has no
+        batching rule), and for GAT — its attention softmax fuses
+        differently under jit and loses the batched==serial bit-identity
+        contract that GCN/SAGE's linear aggregation keeps.
+        """
+        mode = bsp.resolve_aggregation(aggregation, plan.model.kind)
+        if (len(feats_list) <= 1 or mode == "pallas"
+                or plan.model.kind not in ("gcn", "sage")):
+            return super().run_many(plan, feats_list, assignment, pg,
+                                    exchange, aggregation=aggregation)
+        stacked = jnp.asarray(np.stack(
+            [np.asarray(f, np.float32) for f in feats_list]))
+        edges = EdgeList.from_graph(plan.graph)
+        out = _batched_gnn_apply(list(plan.model.params), plan.model.kind,
+                                 stacked, edges.senders, edges.receivers,
+                                 edges.mask, edges.num_vertices)
+        return [np.asarray(o) for o in out]
 
 
 class _MeshBsp(ExecutorBackend):

@@ -68,6 +68,14 @@ class EngineConfig:
     # (auto = the Pallas block-CSR kernels wherever supported on TPU,
     # segment_sum elsewhere). See runtime.bsp.resolve_aggregation.
     aggregation: str = "auto"
+    # Dynamic-update repair thresholds (Engine.apply_delta): fall back to a
+    # full recompile when the repaired partitioning's imbalance (max size /
+    # uniform share) exceeds update_max_imbalance x the pre-update
+    # imbalance (floored at 1.0, so heterogeneity-sized plans aren't
+    # penalized for their intended skew), or its cut fraction exceeds
+    # update_max_cut_growth x the pre-update cut fraction.
+    update_max_imbalance: float = 2.0
+    update_max_cut_growth: float = 1.5
 
     def with_overrides(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -75,7 +83,15 @@ class EngineConfig:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """An immutable compiled serving plan: Engine.compile(graph) -> Plan."""
+    """An immutable compiled serving plan: Engine.compile(graph) -> Plan.
+
+    ``provenance`` records how the plan was produced: "compile" (the full
+    setup phase), "incremental" (``Engine.apply_delta`` repaired an
+    existing plan) or "recompile" (a delta tripped a repair threshold and
+    the full pipeline re-ran); ``update_report`` is the
+    :class:`~repro.api.updates.UpdateReport` of the delta that produced an
+    updated plan (None for fresh compiles).
+    """
     model: ModelSpec
     graph: Graph
     cluster: FogCluster
@@ -83,6 +99,8 @@ class Plan:
     placement: Placement
     partitioned: PartitionedGraph
     config: EngineConfig
+    provenance: str = "compile"
+    update_report: Optional[object] = None
 
     @property
     def num_fogs(self) -> int:
@@ -122,4 +140,5 @@ class Plan:
             "vertices_per_fog": self.vertices_per_fog().tolist(),
             "est_makespan": self.est_makespan,
             "pipeline": dataclasses.asdict(self.config),
+            "provenance": self.provenance,
         }

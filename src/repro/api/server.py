@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.api.registry import EXECUTORS
 from repro.api.session import QueryResult, Session
+from repro.api.updates import GraphDelta, UpdateReport, UpdateRequest
 from repro.core import simulation
 
 
@@ -82,6 +83,22 @@ class Response(QueryResult):
     overlap_saved: float = 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class UpdateResponse:
+    """Acknowledgement of one ``UpdateRequest`` in a mixed stream.
+
+    ``applied`` is False when the session's "deferred" policy buffered the
+    delta (it is coalesced into one repair at the end of the drain; the
+    merged report lands on ``Server.last_update_report``).  Updates are
+    control-plane: they take no time on the simulated serving clock.
+    """
+    request_id: int
+    arrival_time: float
+    applied: bool
+    pending: int = 0
+    report: Optional[UpdateReport] = None
+
+
 class Server:
     """Micro-batching, pipelining request server over one ``Session``.
 
@@ -113,8 +130,10 @@ class Server:
         self.max_batch = int(max_batch)
         self.max_wait = float(max_wait)
         self.pipelined = bool(pipelined)
-        self._pending: List[Request] = []
+        self._pending: List[Union[Request, UpdateRequest]] = []
         self._next_id = 0
+        #: UpdateReport of the most recent applied (or flushed) update.
+        self.last_update_report: Optional[UpdateReport] = None
         # (collect_free, execute_free, prev_execute_start) resource state
         # for simulation.pipeline_schedule, threaded batch-by-batch so the
         # overlap model lives in one place and the simulated clock
@@ -124,15 +143,29 @@ class Server:
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, request: Union[Request, np.ndarray, None] = None, *,
+    def submit(self, request: Union[Request, UpdateRequest, "GraphDelta",
+                                    np.ndarray, None] = None, *,
                arrival_time: Optional[float] = None,
-               executor: Optional[str] = None) -> Request:
-        """Admit one request (a ``Request``, a feature array, or None)."""
-        if not isinstance(request, Request):
-            request = Request(features=request, arrival_time=arrival_time,
-                              executor=executor)
-        if isinstance(request.executor, str):
-            EXECUTORS.resolve(request.executor)   # reject bad keys at admission
+               executor: Optional[str] = None
+               ) -> Union[Request, UpdateRequest]:
+        """Admit one request (a ``Request``, a feature array, or None) or
+        one graph update (an ``UpdateRequest`` or a bare ``GraphDelta``).
+        Updates share the query id space and are served in arrival order;
+        whether they apply immediately or buffer is the session's
+        ``updates`` policy."""
+        if isinstance(request, GraphDelta):
+            request = UpdateRequest(delta=request, arrival_time=arrival_time)
+        if isinstance(request, UpdateRequest):
+            if not isinstance(request.delta, GraphDelta):
+                raise TypeError("UpdateRequest.delta must be a GraphDelta, "
+                                f"got {type(request.delta).__name__}")
+        else:
+            if not isinstance(request, Request):
+                request = Request(features=request,
+                                  arrival_time=arrival_time,
+                                  executor=executor)
+            if isinstance(request.executor, str):
+                EXECUTORS.resolve(request.executor)   # reject bad keys early
         if request.request_id is None:
             request = dataclasses.replace(request, request_id=self._next_id)
         self._next_id = max(self._next_id, request.request_id) + 1
@@ -149,30 +182,80 @@ class Server:
 
     # -- serving ------------------------------------------------------------
 
-    def drain(self) -> List[Response]:
-        """Serve every pending request; responses in service order."""
+    def drain(self) -> List[Union[Response, UpdateResponse]]:
+        """Serve every pending request; responses in service order.
+
+        Updates interleave with query batches at their arrival position:
+        an update always closes the open micro-batch (FIFO), then either
+        applies immediately ("sync" session policy — later queries see the
+        mutated graph) or buffers ("deferred" — later queries in this
+        drain read the stale graph, and the whole buffer coalesces into
+        one repair when the drain finishes).
+
+        On a mid-drain failure, unserved requests are requeued and the
+        exception is re-raised with the responses already produced (served
+        queries and applied-update acks, whose side effects persist)
+        attached as ``exc.partial_responses``, so mixed streams stay
+        recoverable.
+        """
         reqs = self._pending
         self._pending = []
-        # Stable order by arrival (closed-loop requests keep submission
-        # order: they are ready whenever the server is).
-        order = sorted(range(len(reqs)),
-                       key=lambda i: (reqs[i].arrival_time
-                                      if reqs[i].arrival_time is not None
-                                      else 0.0))
-        out: List[Response] = []
+        # Stable order by arrival. A closed-loop request (arrival_time
+        # None) is ready the moment it is admitted, i.e. no earlier than
+        # anything submitted before it: it inherits the latest arrival
+        # seen so far (0.0 when nothing timed precedes it), so untimed
+        # submissions — in particular graph updates — keep their FIFO
+        # position instead of sorting to the front of timed traffic.
+        eff = []
+        latest = 0.0
+        for r in reqs:   # submission order
+            if r.arrival_time is None:
+                eff.append(latest)
+            else:
+                latest = max(latest, r.arrival_time)
+                eff.append(r.arrival_time)
+        order = sorted(range(len(reqs)), key=lambda i: eff[i])
+        out: List[Union[Response, UpdateResponse]] = []
         i = 0
         try:
             while i < len(order):
+                req = reqs[order[i]]
+                if isinstance(req, UpdateRequest):
+                    # Consume the update *before* applying it: if the
+                    # delta is rejected (bad ids for the current graph),
+                    # the requeue handler below must not put it back at
+                    # the head of the queue, or every later drain would
+                    # re-trip on it and starve the requests behind it.
+                    i += 1
+                    out.append(self._handle_update(req))
+                    continue
                 batch, ready = self._form_batch(reqs, order, i)
                 out.extend(self._serve_batch([reqs[k] for k in batch],
                                              ready))
                 i += len(batch)
-        except BaseException:
+            if self.session.pending_updates:   # deferred: one coalesced repair
+                self.last_update_report = self.session.flush_updates()
+        except BaseException as exc:
             # Don't lose work on a mid-drain failure (bad executor key,
-            # wrong feature shape, ...): requeue everything unserved.
+            # wrong feature shape, rejected delta, ...): requeue
+            # everything unserved, and hand the caller what was already
+            # produced — applied updates mutated the session for good.
             self._pending = [reqs[k] for k in order[i:]] + self._pending
+            exc.partial_responses = out
             raise
         return out
+
+    def _handle_update(self, req: UpdateRequest) -> UpdateResponse:
+        report = self.session.update(req.delta)
+        if report is not None:
+            self.last_update_report = report
+        arrival = (self._collect_floor() if req.arrival_time is None
+                   else req.arrival_time)
+        return UpdateResponse(request_id=req.request_id,
+                              arrival_time=arrival,
+                              applied=report is not None,
+                              pending=self.session.pending_updates,
+                              report=report)
 
     def serve(self, requests: Iterable[Request]) -> List[Response]:
         """Submit then drain a whole arrival trace."""
@@ -194,6 +277,8 @@ class Server:
             if isinstance(q, Request):
                 if executor is not None and q.executor is None:
                     q = dataclasses.replace(q, executor=executor)
+                self.submit(q)
+            elif isinstance(q, (UpdateRequest, GraphDelta)):
                 self.submit(q)
             else:
                 self.submit(q, executor=executor)
@@ -223,6 +308,8 @@ class Server:
             if len(batch) >= self.max_batch:
                 break
             r = reqs[order[j]]
+            if isinstance(r, UpdateRequest):
+                break   # FIFO: a graph update closes the batch
             arr = open_t if r.arrival_time is None else r.arrival_time
             if arr > close_t or self._exec_key(r) != key:
                 break   # FIFO: an incompatible/late request closes the batch
@@ -282,15 +369,22 @@ class Server:
 
     @staticmethod
     def summarize(responses: Sequence[Response]) -> Dict[str, float]:
-        """Trace-level metrics for a batch of responses."""
+        """Trace-level metrics for a batch of responses.
+
+        Mixed traces are fine: ``UpdateResponse`` entries are counted as
+        ``updates`` and excluded from the latency/throughput statistics.
+        """
+        updates = [r for r in responses if isinstance(r, UpdateResponse)]
+        responses = [r for r in responses if isinstance(r, Response)]
         if not responses:
-            return {"requests": 0}
+            return {"requests": 0, "updates": len(updates)}
         lat = np.array([r.latency for r in responses])
         fin = max(r.finish_time for r in responses)
         t0 = min(r.arrival_time for r in responses)
         makespan = fin - t0
         return {
             "requests": len(responses),
+            "updates": len(updates),
             "batches": len({r.batch_index for r in responses}),
             "mean_batch": len(responses)
             / len({r.batch_index for r in responses}),

@@ -32,6 +32,7 @@ from repro.api import executors as _executors  # noqa: F401  (registers backends
 from repro.api.executors import ExecutorBackend
 from repro.api.registry import (COMPRESSORS, EXCHANGES, EXECUTORS,
                                 PARTITIONERS)
+from repro.api.updates import GraphDelta, UpdateReport
 from repro.core import simulation
 from repro.core.scheduler import SchedulerState, schedule_step
 from repro.gnn.graph import Graph
@@ -59,15 +60,33 @@ class QueryResult:
 
 
 class Session:
-    """Live serving handle for one Plan: ``query``, ``stream``, ``adapt``."""
+    """Live serving handle for one Plan: ``query``, ``update``, ``adapt``.
+
+    ``updates`` sets the dynamic-graph consistency policy: "sync" applies
+    every ``update(delta)`` immediately (queries after the update always
+    see the mutated graph), "deferred" buffers deltas and coalesces them
+    into one repair at the next ``flush_updates()`` — queries served in
+    between read the stale graph (bounded staleness, amortized repair).
+    """
 
     def __init__(self, plan, *, executor: Optional[str] = None,
                  aggregation: Optional[str] = None,
                  lam: float = 1.3, theta: float = 0.5,
                  adapt_every: int = 0,
                  accuracy_fn: Optional[Callable[[np.ndarray], float]] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 updates: str = "sync"):
+        if updates not in ("sync", "deferred"):
+            raise ValueError(f"updates must be 'sync' or 'deferred', "
+                             f"got {updates!r}")
         self.plan = plan
+        self.update_policy = updates
+        self._pending_deltas: list = []
+        # (|V|, F) of the graph after every buffered delta: lets update()
+        # reject out-of-range deltas at admission instead of poisoning a
+        # deferred flush (deferred deltas address the projected graph).
+        self._projected_shape = (plan.graph.num_vertices,
+                                 plan.graph.feature_dim)
         cfg = plan.config
         self._executor_key = cfg.executor if executor is None else executor
         self._executor = EXECUTORS.resolve(self._executor_key)
@@ -250,6 +269,80 @@ class Session:
             queries = (None for _ in range(queries))
         for q in queries:   # lazily: serve one request per next()
             yield server.replay([q], executor=executor)[0]
+
+    # -- dynamic-graph updates ----------------------------------------------
+
+    @property
+    def pending_updates(self) -> int:
+        """Buffered deltas awaiting a flush (always 0 under "sync")."""
+        return len(self._pending_deltas)
+
+    def update(self, delta: GraphDelta) -> Optional[UpdateReport]:
+        """Absorb one graph mutation (the serving-time update stage).
+
+        Under the "sync" policy the delta is applied immediately and the
+        report returned; under "deferred" it is buffered (returns None)
+        until ``flush_updates`` coalesces the whole buffer into a single
+        repair.  Deferred deltas address the graph produced by the
+        previous delta in the buffer, not the session's current graph.
+        """
+        if not isinstance(delta, GraphDelta):
+            raise TypeError("update() takes a GraphDelta, got "
+                            f"{type(delta).__name__}")
+        # Fail fast at admission: a delta whose ids cannot be valid
+        # against the projected graph must not enter the buffer, or a
+        # later deferred flush would keep tripping over it.
+        v, f = self._projected_shape
+        delta.validate(v, f)
+        v_next = (v - delta.num_removed_vertices
+                  + delta.num_added_vertices)
+        if v_next < self.plan.num_fogs:
+            raise ValueError(
+                f"delta leaves {v_next} vertices for "
+                f"{self.plan.num_fogs} fog partitions")
+        self._pending_deltas.append(delta)
+        self._projected_shape = (v_next, f)
+        if self.update_policy != "sync":
+            return None
+        try:
+            return self.flush_updates()
+        except BaseException:
+            # The rejected delta never happened: drop it (flush_updates
+            # restored the buffer) so later updates aren't blocked.
+            self._pending_deltas.pop()
+            self._projected_shape = (v, f)
+            raise
+
+    def flush_updates(self) -> Optional[UpdateReport]:
+        """Apply every buffered delta in one coalesced repair.
+
+        Rebases the session onto the updated plan: the repair starts from
+        the session's *current* (possibly adapted) assignment, the
+        scheduler state keeps its history/eta but re-anchors on the
+        repaired placement, and cached partition buffers swap for the
+        incrementally rebuilt ones.  Returns None when nothing is pending.
+        """
+        if not self._pending_deltas:
+            return None
+        from repro.api.engine import Engine   # lazy: avoid import cycle
+        deltas, self._pending_deltas = self._pending_deltas, []
+        try:
+            plan2 = Engine.from_plan(self.plan).apply_delta(
+                self.plan, deltas,
+                assignment=self.state.placement.assignment)
+        except BaseException:
+            # Keep the buffer intact so a bad delta can be inspected or
+            # dropped without losing its neighbours.
+            self._pending_deltas = deltas + self._pending_deltas
+            raise
+        self.plan = plan2
+        self.state.placement = dataclasses.replace(
+            plan2.placement,
+            assignment=np.array(plan2.placement.assignment, copy=True))
+        self._partitioned = plan2.partitioned
+        self._projected_shape = (plan2.graph.num_vertices,
+                                 plan2.graph.feature_dim)
+        return plan2.update_report
 
     # -- adaptation ---------------------------------------------------------
 

@@ -10,6 +10,10 @@ Each generator returns a list of ``Request`` objects with nondecreasing
   bursty(n, rate, ...)        batched sensor wake-ups: bursts of
                               near-simultaneous queries separated by
                               idle gaps, at the same long-run rate.
+  mixed(n, rate, ...)         interleaved update/query stream for mutating
+                              IoT graphs: each Poisson arrival is a graph
+                              update (``UpdateRequest``) with probability
+                              ``update_fraction``, else a query.
 
 ``features_fn(i, rng)`` optionally attaches fresh per-request feature
 uploads (e.g. noisy sensor readings); by default requests re-serve the
@@ -17,13 +21,15 @@ graph's stored features (``features=None``).
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import numpy as np
 
 from repro.api.server import Request
+from repro.api.updates import GraphDelta, UpdateRequest
 
 FeaturesFn = Callable[[int, np.random.Generator], Optional[np.ndarray]]
+DeltaFn = Callable[[int, np.random.Generator], GraphDelta]
 
 
 def _build(arrivals: np.ndarray, features_fn: Optional[FeaturesFn],
@@ -81,3 +87,36 @@ def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
     base = start + (np.arange(n) // burst + 1) * (burst / rate)
     arrivals = np.sort(base + rng.exponential(jitter, size=n))
     return _build(arrivals, features_fn, rng, executor)
+
+
+def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
+          update_fraction: float = 0.2, seed: int = 0,
+          features_fn: Optional[FeaturesFn] = None,
+          executor: Optional[str] = None,
+          start: float = 0.0) -> List[Union[Request, UpdateRequest]]:
+    """``n`` Poisson arrivals; each is a graph update with probability
+    ``update_fraction`` (its ``GraphDelta`` built by ``delta_fn(i, rng)``),
+    else an inference query — the mutating-IoT-graph serving workload.
+
+    Updates are applied in arrival order, so ``delta_fn`` must produce
+    deltas valid against the *sequentially updated* graph (deltas that
+    only touch edges/features of stable vertex ids are the easy case).
+    """
+    if not 0.0 <= update_fraction <= 1.0:
+        raise ValueError(f"update_fraction must be in [0, 1], "
+                         f"got {update_fraction}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    arrivals = start + np.cumsum(rng.exponential(1.0 / rate, size=n))
+    is_update = rng.random(n) < update_fraction
+    out: List[Union[Request, UpdateRequest]] = []
+    for i, t in enumerate(arrivals):
+        if is_update[i]:
+            out.append(UpdateRequest(delta=delta_fn(i, rng),
+                                     arrival_time=float(t)))
+        else:
+            feats = None if features_fn is None else features_fn(i, rng)
+            out.append(Request(features=feats, arrival_time=float(t),
+                               executor=executor))
+    return out

@@ -7,21 +7,58 @@ their feature vectors linearly quantized to <q0, q1, q2, q3> bits
 quantization because aggregation smooths their error. Thm 2's closed-form
 compression ratio is implemented and tested against measured bits.
 
-Lossless stage: the paper uses LZ4 + bit shuffling; LZ4 is unavailable
-offline so we use zlib (stdlib) after a byte-shuffle filter — same role,
-same interface. The shuffle transposes the byte planes of fixed-width
+Lossless stage: the paper uses LZ4 + bit shuffling. When the optional
+``lz4`` package is importable, the ``"lz4"`` codec (and the ``daq_lz4``
+COMPRESSORS entry) uses real LZ4 frames after the byte-shuffle filter;
+otherwise requesting it falls back to the stdlib zlib codec with a
+warning. The default stays zlib so wire-byte accounting is stable across
+environments. The shuffle transposes the byte planes of fixed-width
 elements, which groups the mostly-zero high bytes of sparse/quantized
-features and greatly improves the entropy coder's ratio.
+features and greatly improves either entropy coder's ratio.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
 from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
+try:
+    import lz4.frame as _lz4frame
+except ImportError:   # optional dependency (paper's lossless stage)
+    _lz4frame = None
+
 DEFAULT_BITS = (64, 32, 16, 8)
+
+#: Lossless codecs for the post-quantization payload. "auto" resolves to
+#: lz4 when importable, else zlib.
+LOSSLESS_CODECS = ("zlib", "lz4", "auto")
+
+
+def resolve_lossless_codec(codec: str) -> str:
+    """Resolve a LOSSLESS_CODECS name to an available concrete codec."""
+    if codec not in LOSSLESS_CODECS:
+        raise ValueError(f"unknown lossless codec {codec!r}; available: "
+                         f"{', '.join(LOSSLESS_CODECS)}")
+    if codec == "auto":
+        return "lz4" if _lz4frame is not None else "zlib"
+    if codec == "lz4" and _lz4frame is None:
+        warnings.warn("lz4 requested for the lossless stage but the lz4 "
+                      "package is not importable; falling back to zlib",
+                      RuntimeWarning, stacklevel=3)
+        return "zlib"
+    return codec
+
+
+def lossless_compress(payload: bytes, codec: str = "zlib"
+                      ) -> Tuple[bytes, str]:
+    """Compress the shuffled payload; returns (blob, concrete codec)."""
+    codec = resolve_lossless_codec(codec)
+    if codec == "lz4":
+        return _lz4frame.compress(payload), "lz4"
+    return zlib.compress(payload, level=6), "zlib"
 
 
 # ----------------------------------------------------------------------------
@@ -114,6 +151,7 @@ class PackedFeatures:
     bits_per_vertex: np.ndarray            # int64[|V|]
     groups: dict                           # nbits -> (vertex_ids, q, mins, scales)
     lossless_payload: Optional[bytes] = None
+    lossless_codec: Optional[str] = None   # concrete codec of the payload
 
     @property
     def quant_bits(self) -> int:
@@ -143,11 +181,15 @@ def byte_shuffle(a: np.ndarray) -> bytes:
 def daq_pack(features: np.ndarray, degrees: np.ndarray,
              thresholds: Optional[Tuple[int, int, int]] = None,
              bits: Sequence[int] = DEFAULT_BITS,
-             lossless: bool = True) -> PackedFeatures:
-    """Quantize features degree-aware, then zlib+shuffle the payload.
+             lossless: bool = True,
+             codec: str = "zlib") -> PackedFeatures:
+    """Quantize features degree-aware, then shuffle + losslessly compress.
 
     The input is treated as Q=64-bit (the paper's raw feature width); the
-    64-bit bin stores float64 verbatim (no quantization error).
+    64-bit bin stores float64 verbatim (no quantization error). ``codec``
+    selects the lossless stage ("zlib" | "lz4" | "auto"); "lz4" (the
+    paper's choice) degrades to zlib with a warning when the lz4 package
+    is not importable.
     """
     x = np.asarray(features, np.float64)
     degrees = np.asarray(degrees)
@@ -165,12 +207,14 @@ def daq_pack(features: np.ndarray, degrees: np.ndarray,
             q, mins, scales = _quantize_rows(rows, nbits)
         groups[nbits] = (ids, q, mins, scales)
         payload_parts.append(byte_shuffle(q))
-    payload = None
+    payload = used_codec = None
     if lossless:
-        payload = zlib.compress(b"".join(payload_parts), level=6)
+        payload, used_codec = lossless_compress(b"".join(payload_parts),
+                                                codec)
     return PackedFeatures(num_vertices=x.shape[0], feature_dim=x.shape[1],
                           bits_per_vertex=bpv, groups=groups,
-                          lossless_payload=payload)
+                          lossless_payload=payload,
+                          lossless_codec=used_codec)
 
 
 def daq_unpack(packed: PackedFeatures) -> np.ndarray:
@@ -221,6 +265,11 @@ def _register_compressors():
         "daq", "daq", lambda x, d: daq_pack(x, d)))
     COMPRESSORS.register("daq_noll", Compressor(
         "daq_noll", "daq_noll", lambda x, d: daq_pack(x, d, lossless=False)))
+    # The paper's LZ4 lossless stage (optional lz4 dep; zlib fallback with
+    # a warning). Numerics are identical to "daq" — only the lossless
+    # payload (and hence the wire bytes) differs.
+    COMPRESSORS.register("daq_lz4", Compressor(
+        "daq_lz4", "daq_lz4", lambda x, d: daq_pack(x, d, codec="lz4")))
     COMPRESSORS.register("uniform8", Compressor(
         "uniform8", "uniform8", lambda x, d: uniform_pack(x, 8)))
 

@@ -193,6 +193,9 @@ def _partition_wire_bytes(g: Graph, vertex_ids: np.ndarray,
     degs = g.degrees[vertex_ids]
     if compress == "daq":
         return overhead + float(compression.daq_pack(feats, degs).nbytes(True))
+    if compress == "daq_lz4":    # DAQ with the paper's LZ4 lossless stage
+        return overhead + float(
+            compression.daq_pack(feats, degs, codec="lz4").nbytes(True))
     if compress == "daq_noll":   # DAQ without the lossless stage
         return overhead + float(compression.daq_pack(feats, degs, lossless=False)
                                 .nbytes(False))

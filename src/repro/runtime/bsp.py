@@ -129,21 +129,47 @@ class BlockShardCsr:
 
 
 def _stack_block_shards(edge_sets, out_size: int, src_size: int,
-                        block: int = BLOCK) -> BlockShardCsr:
-    """Build one block-CSR per partition and ELL-pad them to a common M."""
-    built = [build_block_csr(s, r, out_size, block) for s, r in edge_sets]
-    m = max(b.shape[1] for b, _, _, _ in built)
-    vb = built[0][0].shape[0]
-    n = len(built)
+                        block: int = BLOCK,
+                        prev: Optional[BlockShardCsr] = None,
+                        clean: Optional[np.ndarray] = None) -> BlockShardCsr:
+    """Build one block-CSR per partition and ELL-pad them to a common M.
+
+    ``prev``/``clean`` enable the dirty-shard rebuild: for partitions with
+    ``clean[p]`` True, the (expensive) ``build_block_csr`` call is skipped
+    and shard ``p``'s tiles are sliced out of ``prev`` instead.  Reuse is
+    only legal when the stacked layout is compatible (same partition count,
+    padded output rows and padded source rows); otherwise everything is
+    rebuilt.  Real tiles are packed first per row-block, so slicing the
+    first ``M_p`` tile slots of a clean shard carries them all.
+    """
+    vb = -(-out_size // block)
+    n = len(edge_sets)
+    src_rows = int(-(-src_size // block) * block)
+    reuse = (prev is not None and clean is not None
+             and prev.blocks.shape[0] == n
+             and prev.out_rows == vb * block and prev.src_rows == src_rows)
+    built = {}
+    per_shard_m = np.zeros(n, np.int64)
+    for p, (s, r) in enumerate(edge_sets):
+        if reuse and clean[p]:
+            per_shard_m[p] = max(1, int(prev.mask[p].sum(axis=1).max()))
+        else:
+            built[p] = build_block_csr(s, r, out_size, block)
+            per_shard_m[p] = built[p][0].shape[1]
+    m = int(per_shard_m.max())
     blocks = np.zeros((n, vb, m, block, block), np.float32)
     cols = np.zeros((n, vb, m), np.int32)
     mask = np.zeros((n, vb, m), np.float32)
-    for p, (b, c, k, _) in enumerate(built):
-        mp = b.shape[1]
+    for p in range(n):
+        mp = int(per_shard_m[p])
+        if p in built:
+            b, c, k, _ = built[p]
+        else:
+            b, c, k = (prev.blocks[p, :, :mp], prev.cols[p, :, :mp],
+                       prev.mask[p, :, :mp])
         blocks[p, :, :mp] = b
         cols[p, :, :mp] = c
         mask[p, :, :mp] = k
-    src_rows = int(-(-src_size // block) * block)
     # The SpMM kernels index the source table by block with no bounds
     # check — guarantee here (where cols are concrete) that a table padded
     # to src_rows covers every referenced column block.
@@ -200,7 +226,12 @@ class PartitionedGraph:
 
 def build_partitioned(g: Graph, assignment: np.ndarray,
                       pad_multiple: int = 8,
-                      build_blocks: bool = True) -> PartitionedGraph:
+                      build_blocks: bool = True,
+                      n: Optional[int] = None,
+                      prev: Optional["PartitionedGraph"] = None,
+                      dirty_local: Optional[np.ndarray] = None,
+                      dirty_halo: Optional[np.ndarray] = None
+                      ) -> PartitionedGraph:
     """Lay the graph out per-partition with static padded shapes.
 
     Padding conventions: every partition shares one slot count P (max
@@ -208,15 +239,26 @@ def build_partitioned(g: Graph, assignment: np.ndarray,
     and one boundary capacity B; padded rows/edges carry zeroed features
     and 0.0 masks. Empty partitions (``assignment`` skipping a part id)
     and single-vertex shards are legal — they simply pad everywhere.
+    ``n`` pins the partition count (needed when trailing partitions may be
+    empty, e.g. after a graph update empties a shard).
 
     ``build_blocks=True`` additionally pre-blocks each shard's adjacency
     into the two ELL-block-CSR operands of the Pallas aggregation path
     (``local_csr`` over the P local slots, ``halo_csr`` over the [n*B]
     gathered halo table); pass False to skip that host-side work when only
     the segment-sum path will run.
+
+    Dirty-shard rebuild: ``prev`` (a layout for the *previous* revision of
+    the graph) plus ``dirty_local`` / ``dirty_halo`` (partition ids whose
+    operands a graph delta invalidated — see
+    ``core.incremental.dirty_partitions``) reuse every clean shard's
+    pre-blocked operands instead of re-blocking them.  The cheap padded COO
+    buffers are always recomputed, so the result is bit-identical to a
+    from-scratch build; reuse silently degrades to a full re-block when the
+    padded layout is incompatible (slot/boundary capacity changed).
     """
     assignment = np.asarray(assignment, np.int64)
-    n = int(assignment.max()) + 1
+    n = (int(assignment.max()) + 1) if n is None else int(n)
     parts: List[np.ndarray] = [np.flatnonzero(assignment == p) for p in range(n)]
     sizes = np.array([len(p) for p in parts])
     slots = int(-(-sizes.max() // pad_multiple) * pad_multiple)
@@ -294,8 +336,24 @@ def build_partitioned(g: Graph, assignment: np.ndarray,
 
     local_csr = halo_csr = None
     if build_blocks:
-        local_csr = _stack_block_shards(local_edges, slots, slots)
-        halo_csr = _stack_block_shards(halo_edges, slots, n * b_pad)
+        # Clean masks for shard reuse: with no prev layout (or no dirty
+        # information) everything is rebuilt; shard-level compatibility
+        # guards live in _stack_block_shards.
+        prev_l = prev_h = clean_l = clean_h = None
+        if (prev is not None and prev.n == n and prev.slots == slots
+                and dirty_local is not None and dirty_halo is not None):
+            if prev.local_csr is not None:
+                prev_l = prev.local_csr
+                clean_l = np.ones(n, bool)
+                clean_l[np.asarray(dirty_local, np.int64)] = False
+            if prev.halo_csr is not None and prev.boundary_slots == b_pad:
+                prev_h = prev.halo_csr
+                clean_h = np.ones(n, bool)
+                clean_h[np.asarray(dirty_halo, np.int64)] = False
+        local_csr = _stack_block_shards(local_edges, slots, slots,
+                                        prev=prev_l, clean=clean_l)
+        halo_csr = _stack_block_shards(halo_edges, slots, n * b_pad,
+                                       prev=prev_h, clean=clean_h)
 
     return PartitionedGraph(
         n=n, slots=slots, edges_per_part=e_pad, boundary_slots=b_pad,
