@@ -1,0 +1,231 @@
+"""Serving-latency benchmark: batched executor dispatch vs the serial loop.
+
+Sweeps micro-batch size x aggregation path x executor backend for the
+batch-axis ``run_many`` execution (PR 5 tentpole: one fused dispatch for
+the whole micro-batch — the batch-grid Pallas kernels on the GCN/SAGE
+kernel path, one vmapped program on the segment-sum/GAT path) against the
+serial per-request ``run`` loop on identical feature batches, asserts the
+two are bit-identical, and writes the sweep to ``BENCH_serving.json``.
+
+Methodology: best-of-repeats wall-clock of the *steady state* (every
+traced call warmed up first, so compile time is excluded — what remains
+is per-request dispatch overhead plus the actual numerics; min rather
+than median because background-load noise is strictly additive). Off-TPU the Pallas kernels
+execute in interpret mode, so kernel-path times measure the interpreter,
+not the MXU: the speedup columns quantify *dispatch amortization* — B
+dispatches collapsing into one — which is exactly the term micro-batching
+exists to kill, and transfers to hardware backends where the batched grid
+additionally amortizes block-CSR operand loads across the batch (the
+``block_cols`` table is scalar-prefetched once per launch). The default
+graph scale keeps per-fog subgraphs at the paper's IoT sizes, where
+dispatch overhead is a first-order serving cost.
+
+    PYTHONPATH=src python benchmarks/serving_latency.py            # full sweep
+    PYTHONPATH=src python benchmarks/serving_latency.py --smoke    # CI guard
+
+The CI ``--smoke`` mode shrinks the sweep and fails (exit 1) unless every
+batched result is bit-identical to its serial loop; the full run
+additionally fails unless the kernel path shows >= 2x batched-over-serial
+speedup at some B >= 8 (the PR acceptance criterion).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import timeit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(REPO, "src", "repro")):
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def _best_time(fn, repeats: int) -> float:
+    """Min wall-clock of ``fn()`` over ``repeats`` runs (pre-warmed).
+
+    Min, not mean/median: scheduler and background-load noise is strictly
+    additive, so the fastest observation is the best estimate of the
+    work's intrinsic cost (the same reasoning as the ``timeit`` docs).
+    """
+    return min(timeit.repeat(fn, number=1, repeat=repeats))
+
+
+def supported_aggregations(plan, requested) -> list:
+    """Drop aggregation paths the plan's model kind cannot run (the
+    kernel path is GCN/SAGE-only; requesting it for GAT would raise)."""
+    from repro.runtime import bsp
+    return [a for a in requested
+            if a != "pallas" or plan.model.kind in bsp.KERNEL_KINDS]
+
+
+def time_batched_vs_serial(backend, plan, feats, aggregation: str,
+                           repeats: int) -> dict:
+    """One measurement point: batched ``run_many`` vs the serial ``run``
+    loop on the same feature batch, bit-identity asserted before timing.
+
+    Shared by this sweep and ``benchmarks/throughput.py``'s
+    ``executor_batching`` record so the two cannot drift.
+    """
+    import numpy as np
+
+    assignment = plan.placement.assignment
+    stacked = np.stack([np.asarray(f, np.float32) for f in feats])
+
+    def serial():
+        return [backend.run(plan, f, assignment, plan.partitioned, "halo",
+                            aggregation=aggregation) for f in feats]
+
+    def batched():
+        return backend.run_many(plan, stacked, assignment, plan.partitioned,
+                                "halo", aggregation=aggregation)
+
+    ser = serial()           # warm-up (jit traces) + parity data
+    bat = batched()
+    ok = all(np.array_equal(x, y) for x, y in zip(bat, ser))
+    t_serial = _best_time(serial, repeats)
+    t_batched = _best_time(batched, repeats)
+    b = len(feats)
+    return {
+        "executor": backend.name, "aggregation": aggregation, "batch": b,
+        "serial_s": t_serial, "batched_s": t_batched,
+        "serial_per_request_ms": t_serial / b * 1e3,
+        "batched_per_request_ms": t_batched / b * 1e3,
+        "speedup": t_serial / max(t_batched, 1e-12),
+        "bit_identical": ok,
+    }
+
+
+def sweep(args) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.api import Engine
+    from repro.api.registry import EXECUTORS
+    from repro.gnn import datasets, models
+
+    g = datasets.load(args.dataset, scale=args.scale, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), args.kind,
+                             [g.feature_dim, args.hidden, 8])
+    plan = Engine((params, args.kind), cluster=args.cluster,
+                  compressor="none").compile(g)
+    rng = np.random.default_rng(args.seed)
+    rows = []
+    parity_ok = True
+    aggregations = supported_aggregations(plan, args.aggregations)
+    for dropped in set(args.aggregations) - set(aggregations):
+        print(f"note: skipping aggregation={dropped!r} "
+              f"(unsupported for kind={args.kind!r})")
+    for executor in args.executors:
+        backend = EXECUTORS.resolve(executor)
+        for agg in aggregations:
+            for b in args.batches:
+                feats = [(g.features + rng.normal(
+                    scale=0.01, size=g.features.shape)).astype(np.float32)
+                    for _ in range(b)]
+                row = time_batched_vs_serial(backend, plan, feats, agg,
+                                             args.repeats)
+                parity_ok = parity_ok and row["bit_identical"]
+                rows.append(row)
+                print(f"{executor:>7} {agg:>12} B={b:<3d} "
+                      f"serial={row['serial_s'] * 1e3:8.2f}ms "
+                      f"batched={row['batched_s'] * 1e3:8.2f}ms "
+                      f"speedup={row['speedup']:5.2f}x "
+                      f"identical={row['bit_identical']}")
+    return {
+        "rows": rows, "parity_ok": parity_ok,
+        "graph": {"vertices": g.num_vertices, "edges": g.num_edges,
+                  "feature_dim": g.feature_dim},
+    }
+
+
+def main(argv=None) -> int:
+    import numpy as np
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + bit-identity guard (scripts/ci.sh)")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serving.json"))
+    ap.add_argument("--dataset", default="siot")
+    ap.add_argument("--scale", type=float, default=0.03)
+    ap.add_argument("--kind", default="gcn")
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--cluster", default="1A+2B+1C")
+    ap.add_argument("--batches", type=int, nargs="+",
+                    default=[1, 2, 4, 8, 16])
+    ap.add_argument("--aggregations", nargs="+",
+                    default=["segment_sum", "pallas"])
+    ap.add_argument("--executors", nargs="+",
+                    default=["sim", "single", "cloud"])
+    ap.add_argument("--repeats", type=int, default=7)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # Shrink only what the user did not set explicitly.
+        if args.batches == ap.get_default("batches"):
+            args.batches = [1, 4, 8]
+        if args.executors == ap.get_default("executors"):
+            args.executors = ["sim"]
+        if args.repeats == ap.get_default("repeats"):
+            args.repeats = 3
+        if args.out == ap.get_default("out"):   # don't dirty the worktree
+            import tempfile
+            args.out = os.path.join(tempfile.gettempdir(),
+                                    "BENCH_serving.smoke.json")
+
+    result = sweep(args)
+    rows = result["rows"]
+
+    by_path = {}
+    for r in rows:
+        if r["batch"] > 1:
+            by_path.setdefault(r["aggregation"], []).append(r["speedup"])
+    summary = {p: float(np.exp(np.mean(np.log(np.maximum(v, 1e-9)))))
+               for p, v in by_path.items()}
+    print("geomean batched-over-serial speedup (B>1) per path:",
+          {k: round(v, 3) for k, v in summary.items()})
+
+    payload = {
+        "benchmark": "serving_latency",
+        "backend": __import__("jax").default_backend(),
+        "methodology": (
+            "steady-state best-of-repeats wall-clock (min: load noise is "
+            "additive); off-TPU the Pallas kernels run in interpret "
+            "mode, so speedups quantify dispatch amortization (B "
+            "executor dispatches -> 1 fused call), not MXU kernel time"),
+        "config": {k: v for k, v in vars(args).items() if k != "smoke"},
+        "graph": result["graph"],
+        "geomean_speedup": summary,
+        "parity_ok": result["parity_ok"],
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+    # Acceptance guards. Bit-identity is non-negotiable on every row; the
+    # full sweep additionally requires the dispatch-amortization win the
+    # PR claims: >= 2x on the kernel path at some batch size >= 8.
+    if not result["parity_ok"]:
+        print("FAIL: a batched run diverged from its serial loop")
+        return 1
+    if not args.smoke:
+        kernel_wins = [r["speedup"] for r in rows
+                       if r["aggregation"] == "pallas" and r["batch"] >= 8]
+        if kernel_wins and max(kernel_wins) < 2.0:
+            print(f"FAIL: kernel path never reached 2x at B>=8 "
+                  f"(best {max(kernel_wins):.2f}x)")
+            return 1
+    else:
+        big = [r["speedup"] for r in rows if r["batch"] >= 8]
+        if big and max(big) <= 1.0:
+            print("FAIL: batched execution never beat the serial loop")
+            return 1
+    print("PASS: batched execution bit-identical to the serial loop"
+          + ("" if args.smoke else " and >=2x on the kernel path at B>=8"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -61,6 +61,43 @@ def run_config(plan, trace, *, executor: str, max_batch: int,
     return out
 
 
+def measure_executor_batching(plan, graph, executors, batch: int,
+                              repeats: int = 5) -> list:
+    """Batched ``run_many`` vs the serial ``run`` loop per executor.
+
+    This is the *executor-dispatch* term of the batching win (PR 5: one
+    fused traced call for the whole micro-batch), measured standalone so
+    the trajectory records it separately from the simulated-clock
+    pipeline speedup the sweep above reports. The measurement itself
+    (incl. the bit-identity assertion) lives in
+    ``benchmarks/serving_latency.py`` — shared so the two cannot drift.
+    """
+    import numpy as np
+
+    import serving_latency
+
+    from repro.api.registry import EXECUTORS
+
+    rng = np.random.default_rng(0)
+    feats = [(graph.features + rng.normal(
+        scale=0.01, size=graph.features.shape)).astype(np.float32)
+        for _ in range(batch)]
+    out = []
+    for executor in executors:
+        backend = EXECUTORS.resolve(executor)
+        for agg in serving_latency.supported_aggregations(
+                plan, ["segment_sum", "pallas"]):
+            row = serving_latency.time_batched_vs_serial(
+                backend, plan, feats, agg, repeats)
+            assert row["bit_identical"], (executor, agg)
+            out.append(row)
+            print(f"executor-batching {executor}/{agg}: B={batch} "
+                  f"serial={row['serial_s'] * 1e3:.1f}ms "
+                  f"batched={row['batched_s'] * 1e3:.1f}ms "
+                  f"({row['speedup']:.2f}x, bit-identical)")
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -130,10 +167,20 @@ def main(argv=None) -> int:
                       f"{row['mean_batch']:.2f},"
                       f"{row['speedup_vs_serial']:.3f}")
 
+    # Standalone executor-dispatch term: batched run_many vs the serial
+    # run loop at the sweep's largest micro-batch (bit-identity asserted).
+    # Full runs only — the CI smoke already covers this measurement via
+    # benchmarks/serving_latency.py --smoke.
+    exec_batching = []
+    if not args.smoke:
+        exec_batching = measure_executor_batching(
+            plan, graph, args.executors, batch=max(max(args.batches), 2))
+
     payload = {
         "benchmark": "server_throughput",
         "config": {k: v for k, v in vars(args).items() if k != "smoke"},
         "graph": {"vertices": graph.num_vertices, "edges": graph.num_edges},
+        "executor_batching": exec_batching,
         "sweep": sweep,
     }
     with open(args.out, "w") as f:

@@ -15,3 +15,6 @@ PYTHONPATH=src python benchmarks/roofline.py --smoke
 # Dynamic-graph updates: incremental apply_delta must stay bit-identical
 # to a full Engine.compile of the mutated graph.
 PYTHONPATH=src python benchmarks/updates.py --smoke
+# Batch-axis executor dispatch: batched run_many must stay bit-identical
+# to the serial per-request loop (and beat it at B>=8).
+PYTHONPATH=src python benchmarks/serving_latency.py --smoke

@@ -26,6 +26,7 @@ from repro.api.plan import EngineConfig, ModelSpec, Plan, as_model
 from repro.api.updates import GraphDelta, UpdateReport
 from repro.core import incremental, simulation
 from repro.gnn.graph import Graph
+from repro.kernels import ops
 from repro.runtime import bsp
 
 
@@ -250,6 +251,15 @@ class Engine:
                     f"{max_cut_growth:.2f} x {dp.cut_fraction_before:.3f}")
         if force == "recompile":
             recompile_reason = "forced"
+        if dp.structural:
+            # The adjacency changed: retire the pre-update graph's cached
+            # whole-graph block-CSR operands (the single-program kernel
+            # path's keyed cache) alongside the dirty-shard rebuild. The
+            # mutated graph fingerprints differently, so stale operands
+            # can never be served — this just stops them pinning memory
+            # until LRU eviction (a session still on the old plan simply
+            # re-blocks on demand).
+            ops.invalidate_block_csr(plan.graph)
         if recompile_reason:
             plan2 = self._recompile(dp.graph)
             report = UpdateReport(mode="recompile", reason=recompile_reason,

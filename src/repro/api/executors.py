@@ -23,22 +23,44 @@ mesh backend routes each shard's aggregation through the pre-blocked
 local+halo SpMM (and, with a DAQ compressor, ships the halo quantized and
 dequantizes inside the fused kernel). ``resolve_aggregation`` in
 ``runtime.bsp`` defines the fallback/strictness rules.
+
+Micro-batch execution (``run_many``) is natively batched on every backend:
+the Server's stacked [B, V, F] feature batch runs in ONE traced call — the
+kernel path through the batch-axis grid kernels (``block_spmm_batched`` /
+``dequant_spmm_batched``, one fused dispatch for the whole batch), the
+segment-sum and GAT paths through one ``jax.vmap`` program, and the mesh
+backend through ``bsp.bsp_infer_many`` (one shard_map launch, one
+collective per layer for the whole batch). Batched responses are
+bit-identical to the serial per-request loop: serial execution runs the
+same jitted per-example functions, and vmap / the batched kernels preserve
+the per-example op sequence exactly (asserted per executor x model in
+tests/test_batched_exec.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Sequence
+from typing import List, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.registry import EXECUTORS
-from repro.gnn.layers import EdgeList, masked_degree
+from repro.gnn.layers import EdgeList, apply_layer_with_sum
 from repro.gnn.models import gnn_apply
 from repro.kernels import ops
+from repro.kernels.gather_aggregate import (block_spmm, block_spmm_batched,
+                                            padded_feature_dim)
 from repro.runtime import bsp
+
+
+def _as_stack(feats: Union[np.ndarray, Sequence[np.ndarray]]) -> np.ndarray:
+    """Coerce a micro-batch (list of [V, F] arrays or an already stacked
+    [B, V, F] array) to one stacked float32 array."""
+    if isinstance(feats, np.ndarray) and feats.ndim == 3:
+        return np.asarray(feats, np.float32)
+    return np.stack([np.asarray(f, np.float32) for f in feats])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,104 +91,136 @@ class ExecutorBackend:
             aggregation: str = "segment_sum") -> np.ndarray:
         raise NotImplementedError
 
-    def run_many(self, plan, feats_list: Sequence[np.ndarray],
+    def run_many(self, plan,
+                 feats: Union[np.ndarray, Sequence[np.ndarray]],
                  assignment: np.ndarray, pg: bsp.PartitionedGraph,
                  exchange: str,
                  aggregation: str = "segment_sum") -> List[np.ndarray]:
         """One executor run over a micro-batch of feature sets.
 
-        The default serves each set through ``run`` back-to-back, which
-        keeps batched numerics bit-identical to serial queries (the
-        batching win is priced by ``simulation.simulate(batch_size=B)``);
-        backends with a natively batched layout may override.
+        ``feats`` is either a stacked [B, V, F] array (what the Server's
+        micro-batcher hands over) or a sequence of [V, F] arrays. The
+        base implementation serves each set through ``run`` back-to-back;
+        every registered backend overrides it with a natively batched
+        single-dispatch path whose per-request results are bit-identical
+        to this serial loop (the batching win is additionally priced by
+        ``simulation.simulate(batch_size=B)``).
         """
         return [self.run(plan, f, assignment, pg, exchange,
                          aggregation=aggregation)
-                for f in feats_list]
+                for f in _as_stack(feats)]
 
 
-def _graph_block_csr(graph) -> ops.BlockCsr:
-    """Whole-graph block-CSR for the single-program kernel path.
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _jit_gnn_apply(params, kind, h, senders, receivers, mask):
+    """Jitted per-example K-layer forward (segment-sum aggregation).
 
-    Cached on the (mutable) ``Graph`` instance — the adjacency is
-    feature-independent, so one prepared operand serves every query and
-    every session over that graph.
+    The serial ``run`` path uses this (rather than tracing ``gnn_apply``
+    eagerly) so serial and batched execution share one compiled op
+    sequence: jit-vs-eager differs in the last float bits for some layer
+    stacks (GAT's attention softmax), while ``jax.vmap`` of a jitted
+    function is bit-identical per example.
     """
-    csr = getattr(graph, "_block_csr_cache", None)
-    if csr is None:
-        csr = ops.BlockCsr(graph)
-        graph._block_csr_cache = csr
-    return csr
+    edges = EdgeList(senders, receivers, mask, h.shape[-2])
+    return gnn_apply(params, kind, h, edges)
 
 
-def _kernel_aggregate(csr: ops.BlockCsr, kind: str):
-    """The model's ``aggregate=`` hook backed by the Pallas SpMM."""
-
-    def agg_sum(h, edges, h_src=None):
-        src = h if h_src is None else h_src
-        return csr.aggregate_traced(src)
-
-    if kind != "sage":
-        return agg_sum
-
-    def agg_mean(h, edges, h_src=None):
-        deg = masked_degree(edges)
-        return agg_sum(h, edges, h_src) / jnp.maximum(deg, 1.0)[:, None]
-
-    return agg_mean
-
-
-@functools.partial(jax.jit, static_argnames=("kind", "num_vertices"))
-def _batched_gnn_apply(params, kind, stacked, senders, receivers, mask,
-                       num_vertices):
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _batched_gnn_apply(params, kind, stacked, senders, receivers, mask):
     """vmap of the K-layer forward over a [B, V, F] feature stack.
 
     One traced call per (graph, batch-size) instead of B dispatches; the
-    per-example computation is the same op sequence as ``gnn_apply``, so
-    results are bit-identical to the serial loop (asserted in
-    tests/test_updates.py and by test_server's batched==serial suite).
-    ``num_vertices`` is static (segment_sum needs a concrete count).
+    per-example computation is the same op sequence as
+    ``_jit_gnn_apply``, so results are bit-identical to the serial loop
+    for every kind — including GAT, whose per-layer attention re-weighting
+    rides this vmapped edge-weighted path (asserted in
+    tests/test_batched_exec.py and tests/test_updates.py).
     """
-    edges = EdgeList(senders, receivers, mask, num_vertices)
+    edges = EdgeList(senders, receivers, mask, stacked.shape[-2])
     return jax.vmap(lambda h: gnn_apply(params, kind, h, edges))(stacked)
 
 
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def _kernel_gnn_apply(params, kind, h, senders, receivers, mask,
+                      blocks, cols, cmask, *, interpret):
+    """K-layer forward with block-CSR Pallas aggregation, single or stacked.
+
+    ``h`` is one [V, F] feature table or a stacked [B, V, F] micro-batch.
+    Per layer, the neighbor sum runs as ONE fused SpMM dispatch —
+    ``block_spmm`` for a single example, ``block_spmm_batched`` (batch
+    grid axis + scalar-prefetched column table) for a stack — and the
+    dense layer update then runs per-example (under ``jax.vmap`` for the
+    stacked case), which keeps batched results bit-identical to serial
+    ones: the batched kernel preserves the per-(row-block, feature-tile)
+    arithmetic of the unbatched kernel, and vmap preserves the dense op
+    sequence. GCN/SAGE only (GAT re-weights edges per layer and cannot be
+    pre-blocked; ``resolve_aggregation`` rejects it upstream).
+    """
+    v = h.shape[-2]
+    edges = EdgeList(senders, receivers, mask, v)
+    padded_v = blocks.shape[0] * blocks.shape[-1]
+
+    def spmm(src):
+        f = src.shape[-1]
+        pad = ((0, padded_v - v), (0, padded_feature_dim(f) - f))
+        if src.ndim == 3:
+            out = block_spmm_batched(
+                blocks, cols, cmask,
+                jnp.pad(src.astype(jnp.float32), ((0, 0),) + pad),
+                interpret=interpret)
+            return out[:, :v, :f]
+        out = block_spmm(blocks, cols, cmask,
+                         jnp.pad(src.astype(jnp.float32), pad),
+                         interpret=interpret)
+        return out[:v, :f]
+
+    n = len(params)
+    for i, p in enumerate(params):
+        # Fused (batched) SpMM dispatch, then the shared dense tail.
+        h = apply_layer_with_sum(kind, p, h, edges, spmm(h), last=i == n - 1)
+    return h
+
+
 class _SingleProgram(ExecutorBackend):
-    def run(self, plan, feats, assignment, pg, exchange,
-            aggregation="segment_sum"):
+    def _apply(self, plan, h: jnp.ndarray,
+               aggregation: str) -> jnp.ndarray:
+        """Dispatch one traced call for ``h`` = [V, F] or [B, V, F]."""
         # Single-program layout: no cross-fog exchange is involved, so the
         # kernel path only depends on the model kind.
         mode = bsp.resolve_aggregation(aggregation, plan.model.kind)
-        aggregate = None
-        if mode == "pallas":
-            aggregate = _kernel_aggregate(_graph_block_csr(plan.graph),
-                                          plan.model.kind)
-        return np.asarray(gnn_apply(list(plan.model.params), plan.model.kind,
-                                    feats, EdgeList.from_graph(plan.graph),
-                                    aggregate=aggregate))
-
-    def run_many(self, plan, feats_list, assignment, pg, exchange,
-                 aggregation="segment_sum"):
-        """Batched fast path: stack the micro-batch and run one traced
-        call (``vmap`` over the batch axis) instead of B dispatches.
-
-        Falls back to the serial base loop for singleton batches, for the
-        Pallas kernel path (the whole-graph block-CSR kernel has no
-        batching rule), and for GAT — its attention softmax fuses
-        differently under jit and loses the batched==serial bit-identity
-        contract that GCN/SAGE's linear aggregation keeps.
-        """
-        mode = bsp.resolve_aggregation(aggregation, plan.model.kind)
-        if (len(feats_list) <= 1 or mode == "pallas"
-                or plan.model.kind not in ("gcn", "sage")):
-            return super().run_many(plan, feats_list, assignment, pg,
-                                    exchange, aggregation=aggregation)
-        stacked = jnp.asarray(np.stack(
-            [np.asarray(f, np.float32) for f in feats_list]))
+        params = list(plan.model.params)
         edges = EdgeList.from_graph(plan.graph)
-        out = _batched_gnn_apply(list(plan.model.params), plan.model.kind,
-                                 stacked, edges.senders, edges.receivers,
-                                 edges.mask, edges.num_vertices)
+        if mode == "pallas":
+            csr = ops.block_csr_for(plan.graph)
+            return _kernel_gnn_apply(
+                params, plan.model.kind, h, edges.senders, edges.receivers,
+                edges.mask, csr.blocks, csr.cols, csr.mask,
+                interpret=jax.default_backend() != "tpu")
+        if h.ndim == 3:
+            return _batched_gnn_apply(params, plan.model.kind, h,
+                                      edges.senders, edges.receivers,
+                                      edges.mask)
+        return _jit_gnn_apply(params, plan.model.kind, h, edges.senders,
+                              edges.receivers, edges.mask)
+
+    def run(self, plan, feats, assignment, pg, exchange,
+            aggregation="segment_sum"):
+        return np.asarray(self._apply(plan, jnp.asarray(feats, jnp.float32),
+                                      aggregation))
+
+    def run_many(self, plan, feats, assignment, pg, exchange,
+                 aggregation="segment_sum"):
+        """Batched fast path: one traced call over the stacked micro-batch
+        instead of B dispatches — the batch-axis Pallas kernels for the
+        GCN/SAGE kernel path, ``jax.vmap`` for segment-sum and GAT.
+        Singleton batches take the serial path (B=1 reproduces the
+        single-query numbers and timings exactly).
+        """
+        stacked = _as_stack(feats)
+        if stacked.shape[0] <= 1:
+            return super().run_many(plan, stacked, assignment, pg,
+                                    exchange, aggregation=aggregation)
+        out = self._apply(plan, jnp.asarray(stacked), aggregation)
         return [np.asarray(o) for o in out]
 
 
@@ -205,6 +259,24 @@ class _MeshBsp(ExecutorBackend):
             list(plan.model.params), plan.model.kind, g, assignment,
             exchange=exchange, aggregation=aggregation,
             halo_quant=self._halo_quant(plan, exchange, aggregation), pg=pg)
+
+    def run_many(self, plan, feats, assignment, pg, exchange,
+                 aggregation="segment_sum"):
+        """One shard_map launch for the whole micro-batch: the stacked
+        [B, V, F] features become an [n, B, P, F] partition table and the
+        per-layer halo collective ships every example's boundary rows in
+        one all_gather (see ``bsp.bsp_apply_many``). Bit-identical to the
+        serial per-request loop; singleton batches take the serial path.
+        """
+        stacked = _as_stack(feats)
+        if stacked.shape[0] <= 1:
+            return super().run_many(plan, stacked, assignment, pg,
+                                    exchange, aggregation=aggregation)
+        out = bsp.bsp_infer_many(
+            list(plan.model.params), plan.model.kind, stacked, pg,
+            exchange=exchange, aggregation=aggregation,
+            halo_quant=self._halo_quant(plan, exchange, aggregation))
+        return [np.asarray(o) for o in out]
 
 
 EXECUTORS.register("sim", _SingleProgram("sim", "multi"))

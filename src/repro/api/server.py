@@ -24,9 +24,14 @@ separately callable stages:
     max(collect, execute) instead of their sum.
 
 Numerics are exact: each request's embeddings are computed by the same
-compressor round-trip + executor run as ``Session.query``, so batched
-responses are bit-identical to serial ones — only the latency accounting
-knows about batching (tested in ``tests/test_server.py``).
+compressor round-trip + executor numerics as ``Session.query``, so batched
+responses are bit-identical to serial ones. Since the batch-axis executor
+work (PR 5) this holds *with* genuinely batched execution: the micro-batch
+is stacked into one [B, V, F] array and every backend's ``run_many``
+serves it in a single traced call — one fused Pallas dispatch on the
+kernel path, one vmapped program otherwise — instead of a per-request
+Python loop (tested in ``tests/test_server.py`` and
+``tests/test_batched_exec.py``).
 
     server = plan.server(max_batch=8)
     for r in server.replay(traces.poisson(64, rate=4.0)):
@@ -330,9 +335,12 @@ class Server:
             [(ready, c_t, e_t)], pipelined=self.pipelined,
             start=self._pipe_state)[-1]
         self._pipe_state = simulation.schedule_state(sched)
-        # Numerics: per-request compressor round-trip, one run over the
-        # batch (bit-identical to serial Session.query by construction).
-        collected = [sess.collect(r.features) for r in batch]
+        # Numerics: per-request compressor round-trip, then ONE stacked
+        # [B, V, F] array handed to the executor's natively batched
+        # run_many (bit-identical to serial Session.query — asserted in
+        # tests/test_server.py and tests/test_batched_exec.py).
+        collected = np.stack([np.asarray(sess.collect(r.features),
+                                         np.float32) for r in batch])
         embs = backend.run_many(sess.plan, collected,
                                 sess.state.placement.assignment,
                                 sess.partitioned(backend),

@@ -148,8 +148,13 @@ def sage_init(key, in_dim: int, out_dim: int):
 def sage_layer(params, h, edges: EdgeList, *, activation=jax.nn.relu,
                aggregate=aggregate_mean, h_src=None):
     a = aggregate(h, edges, h_src)
-    z = jnp.concatenate([a, h], axis=-1)
-    out = z @ params["w"] + params["b"]
+    # The [a | h] @ W update, written as two explicit matmuls: XLA's
+    # dot(concat) rewrite fires differently for batched vs unbatched
+    # operands, which would break the batched==serial bit-identity the
+    # executor run_many contract relies on. Splitting pins one reduction
+    # order for both lowerings.
+    f = h.shape[-1]
+    out = a @ params["w"][:f] + h @ params["w"][f:] + params["b"]
     if activation is not None:
         out = activation(out)
     # L2 normalize as in GraphSAGE inference.
@@ -159,3 +164,37 @@ def sage_layer(params, h, edges: EdgeList, *, activation=jax.nn.relu,
 LAYER_FNS = {"gcn": (gcn_init, gcn_layer),
              "gat": (gat_init, gat_layer),
              "sage": (sage_init, sage_layer)}
+
+
+def apply_layer_with_sum(kind: str, p, h, edges: EdgeList, a_sum, *,
+                         last: bool):
+    """Apply one GCN/SAGE layer given its precomputed neighbor SUM.
+
+    The shared tail of every fused-kernel execution path (single-program
+    and mesh shards alike): the expensive neighbor sum ``a_sum`` has
+    already been computed — by one fused (possibly batch-grid) SpMM
+    dispatch — and only the cheap dense update remains. ``h``/``a_sum``
+    are one [V, F] table or a stacked [B, V, F] micro-batch; the stacked
+    case runs the update per-example under ``jax.vmap``, which preserves
+    the per-example op sequence exactly (broadcasting the dense algebra
+    over [B, V, F] does not: XLA lowers some batched contractions
+    differently in the last float bits), keeping batched==serial
+    bit-identity. SAGE's mean normalization is applied here, from the
+    same masked degree the plain path uses.
+    """
+    _, layer_fn = LAYER_FNS[kind]
+    kwargs = {"activation": None} if last else {}
+
+    def apply_one(hh, aa):
+        if kind == "sage":               # SAGE aggregates the mean
+            def hook(h_, edges_, h_src_=None, _aa=aa):
+                deg = masked_degree(edges_)
+                return _aa / jnp.maximum(deg, 1.0)[:, None]
+        else:
+            def hook(h_, edges_, h_src_=None, _aa=aa):
+                return _aa
+        return layer_fn(p, hh, edges, aggregate=hook, **kwargs)
+
+    if h.ndim == 3:
+        return jax.vmap(apply_one)(h, a_sum)
+    return apply_one(h, a_sum)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.gather_aggregate import BLOCK
 
@@ -116,5 +117,75 @@ def dequant_spmm(blocks: jnp.ndarray, block_cols: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block, f_tile), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((vb * block, f), jnp.float32),
+        interpret=interpret,
+    )(block_cols, block_mask, blocks, codes, scales, mins)
+
+
+def _dequant_spmm_batched_kernel(cols_ref, mask_ref, blocks_ref, codes_ref,
+                                 scales_ref, mins_ref, out_ref, *, m: int,
+                                 block: int):
+    """One (row-block, feature-tile, batch) grid step; ``cols_ref`` is the
+    scalar-prefetched [VB, M] table (fetched once per launch, not per batch
+    element)."""
+    i = pl.program_id(0)
+    acc = jnp.zeros_like(out_ref)
+
+    def body(k, acc):
+        tile = blocks_ref[k]                                    # [B, B]
+        col = cols_ref[i, k]
+        msk = mask_ref[k]
+        codes = codes_ref[pl.dslice(col * block, block), :]     # [B, TF]
+        sc = scales_ref[pl.dslice(col * block, block)]          # [B]
+        mn = mins_ref[pl.dslice(col * block, block)]            # [B]
+        panel = codes.astype(jnp.float32) * sc[:, None] + mn[:, None]
+        return acc + msk * jnp.dot(tile, panel,
+                                   preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, m, body, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "f_tile", "interpret"))
+def dequant_spmm_batched(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                         block_mask: jnp.ndarray, codes: jnp.ndarray,
+                         scales: jnp.ndarray, mins: jnp.ndarray, *,
+                         block: int = BLOCK, f_tile: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """out[b] = A @ dequant(codes[b]): the fused kernel over a quantized
+    [B, V, F] feature stack (``scales``/``mins`` are f32[B, V]).
+
+    Batch-axis variant of :func:`dequant_spmm`, mirroring
+    ``block_spmm_batched``: one dispatch for the whole micro-batch, shared
+    block-CSR operands, scalar-prefetched ``block_cols``, B innermost in
+    the grid so adjacency tiles amortize across the batch. Per-element
+    results are bit-identical to the unbatched kernel.
+    """
+    vb, m, blk, _ = blocks.shape
+    b, v, f = codes.shape
+    assert blk == block and v % block == 0
+    assert scales.shape == mins.shape == (b, v), (scales.shape, codes.shape)
+    f_tile = min(f_tile, f)
+    assert f % f_tile == 0
+    grid = (vb, f // f_tile, b)
+    kernel = functools.partial(_dequant_spmm_batched_kernel, m=m, block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,           # block_cols
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, m), lambda i, j, k, cols: (i, 0)),
+            pl.BlockSpec((None, m, block, block),
+                         lambda i, j, k, cols: (i, 0, 0, 0)),
+            pl.BlockSpec((None, v, f_tile),
+                         lambda i, j, k, cols: (k, 0, j)),   # codes[b]
+            pl.BlockSpec((None, v), lambda i, j, k, cols: (k, 0)),
+            pl.BlockSpec((None, v), lambda i, j, k, cols: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block, f_tile),
+                               lambda i, j, k, cols: (k, i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, vb * block, f), jnp.float32),
         interpret=interpret,
     )(block_cols, block_mask, blocks, codes, scales, mins)

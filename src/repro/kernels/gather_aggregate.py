@@ -17,6 +17,12 @@ per-partition local graphs (Fograph shards the global graph across fogs), so
 V here is |V|/n_fogs and the panel fits VMEM for the paper's scales.
 
 Kernel body is validated in interpret mode on CPU against ref.block_spmm_ref.
+
+Both SpMM kernels come in two flavours: the single-query [V, F] form and a
+[B, V, F] *feature-stack* form (``block_spmm_batched``) that serves a whole
+serving micro-batch in one fused dispatch — B is an extra (fastest-varying)
+grid axis so the block-CSR operand loads amortize across the batch, and the
+``block_cols`` table moves to scalar prefetch (``PrefetchScalarGridSpec``).
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 128  # MXU-native tile edge
 
@@ -112,6 +119,75 @@ def _spmm_kernel(cols_ref, mask_ref, blocks_ref, h_ref, out_ref, *, m: int,
 
     acc = jax.lax.fori_loop(0, m, body, acc)
     out_ref[...] = acc
+
+
+def _spmm_batched_kernel(cols_ref, mask_ref, blocks_ref, h_ref, out_ref, *,
+                         m: int, block: int):
+    """One (row-block, feature-tile, batch) grid step.
+
+    ``cols_ref`` is the *whole* [VB, M] column-index table, scalar-prefetched
+    (SMEM-resident) once for the entire launch — the batch axis iterates
+    fastest, so the adjacency tiles and index rows of a block row are
+    fetched once and reused for all B feature stacks.
+    """
+    i = pl.program_id(0)
+    acc = jnp.zeros_like(out_ref)
+
+    def body(k, acc):
+        tile = blocks_ref[k]                      # [B, B]
+        col = cols_ref[i, k]
+        msk = mask_ref[k]
+        panel = h_ref[pl.dslice(col * block, block), :]   # [B, TF]
+        return acc + msk * jnp.dot(tile, panel,
+                                   preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, m, body, acc)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "f_tile", "interpret"))
+def block_spmm_batched(blocks: jnp.ndarray, block_cols: jnp.ndarray,
+                       block_mask: jnp.ndarray, h: jnp.ndarray, *,
+                       block: int = BLOCK, f_tile: int = 128,
+                       interpret: bool = True) -> jnp.ndarray:
+    """out[b] = A @ h[b] for a [B, V, F] feature stack — one fused dispatch.
+
+    Batch-axis variant of :func:`block_spmm`: the same ELL-block-CSR
+    operands serve every element of the micro-batch, with the batch as an
+    extra (fastest-varying) grid dimension so the adjacency tiles loaded
+    for a block row are amortized across all B stacks, and ``block_cols``
+    moved to ``PrefetchScalarGridSpec`` scalar prefetch so the column-index
+    table is resident once per launch instead of refetched per batch
+    element. Per-(row-block, feature-tile) arithmetic is the exact op
+    sequence of the unbatched kernel, so each ``out[b]`` is bit-identical
+    to ``block_spmm(..., h[b])``.
+    """
+    vb, m, blk, _ = blocks.shape
+    b, v, f = h.shape
+    assert blk == block and v % block == 0, (blocks.shape, h.shape)
+    f_tile = min(f_tile, f)
+    assert f % f_tile == 0, (f, f_tile)
+    grid = (vb, f // f_tile, b)
+    kernel = functools.partial(_spmm_batched_kernel, m=m, block=block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,           # block_cols: whole table, SMEM
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, m), lambda i, j, k, cols: (i, 0)),   # mask
+            pl.BlockSpec((None, m, block, block),
+                         lambda i, j, k, cols: (i, 0, 0, 0)),        # tiles
+            pl.BlockSpec((None, v, f_tile),
+                         lambda i, j, k, cols: (k, 0, j)),           # h[b]
+        ],
+        out_specs=pl.BlockSpec((None, block, f_tile),
+                               lambda i, j, k, cols: (k, i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, vb * block, f), jnp.float32),
+        interpret=interpret,
+    )(block_cols, block_mask, blocks, h)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "f_tile", "interpret"))

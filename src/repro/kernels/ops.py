@@ -7,6 +7,8 @@ kernels target TPU; `interpret=True` executes the same kernel body on CPU).
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from typing import Optional, Tuple
 
 import jax
@@ -17,6 +19,7 @@ from repro.gnn.graph import Graph
 from repro.kernels import ref
 from repro.kernels.daq_dequant import dequant, dequant_spmm
 from repro.kernels.gather_aggregate import (BLOCK, block_spmm,
+                                            block_spmm_batched,
                                             build_block_csr,
                                             padded_feature_dim)
 
@@ -56,15 +59,25 @@ class BlockCsr:
 
         Pads rows to the prepared block grid and features to the kernel's
         lane multiple with ``jnp.pad``, so it composes with the model's
-        layer functions as a drop-in ``aggregate=`` backend.
+        layer functions as a drop-in ``aggregate=`` backend. ``h`` may be
+        a single [V, F] feature table or a stacked [B, V, F] micro-batch —
+        the stacked form runs ``block_spmm_batched`` (one fused dispatch
+        with B as an extra grid axis) and returns [B, V, F], with each
+        ``out[b]`` bit-identical to the single-query call on ``h[b]``.
         """
         if interpret is None:
             interpret = not _on_tpu()
-        v, f = h.shape
+        v, f = h.shape[-2:]
         f_pad = padded_feature_dim(f)
-        hp = jnp.pad(h.astype(jnp.float32),
-                     ((0, self.padded_v - v), (0, f_pad - f)))
-        out = block_spmm(self.blocks, self.cols, self.mask, hp,
+        pad = ((0, self.padded_v - v), (0, f_pad - f))
+        if h.ndim == 3:
+            out = block_spmm_batched(
+                self.blocks, self.cols, self.mask,
+                jnp.pad(h.astype(jnp.float32), ((0, 0),) + pad),
+                interpret=interpret)
+            return out[:, :v, :f]
+        out = block_spmm(self.blocks, self.cols, self.mask,
+                         jnp.pad(h.astype(jnp.float32), pad),
                          interpret=interpret)
         return out[:v, :f]
 
@@ -91,6 +104,75 @@ class BlockCsr:
                            jnp.asarray(cp), jnp.asarray(sp), jnp.asarray(mp),
                            interpret=interpret)
         return np.asarray(out)[:v, :f]
+
+
+# ----------------------------------------------------------------------------
+# Keyed BlockCsr cache (shared by every single-program executor backend)
+# ----------------------------------------------------------------------------
+
+#: LRU of prepared block-CSR operands, keyed by
+#: (graph adjacency fingerprint, aggregation normalization, block shape).
+#: Keying on content (not Graph identity) means a Session aggregation
+#: override, a fresh ``with_features``-style Graph copy, or two plans over
+#: the same topology all share one prepared operand instead of silently
+#: re-blocking per query.
+_BLOCK_CSR_CACHE: "OrderedDict[tuple, BlockCsr]" = OrderedDict()
+_BLOCK_CSR_CACHE_MAX = 16
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Content hash of a graph's *adjacency* (features excluded).
+
+    Vertex count and edge endpoints feed the digest; that covers
+    everything the block-CSR operands depend on (mean-normalization
+    degrees are the receiver counts of those same edges), so a mutated
+    graph can never alias a stale cache entry.
+
+    The digest is O(E) to compute, so it is memoized on the Graph
+    instance — adjacency arrays are treated as immutable everywhere in
+    this codebase (mutation goes through ``incremental.mutate_graph``,
+    which builds a new Graph) — keeping the per-query cache lookup O(1).
+    """
+    fp = getattr(g, "_adjacency_fingerprint", None)
+    if fp is None:
+        d = hashlib.blake2b(digest_size=16)
+        d.update(np.int64(g.num_vertices).tobytes())
+        d.update(np.ascontiguousarray(g.senders, np.int64).tobytes())
+        d.update(np.ascontiguousarray(g.receivers, np.int64).tobytes())
+        fp = d.hexdigest()
+        g._adjacency_fingerprint = fp
+    return fp
+
+
+def block_csr_for(g: Graph, block: int = BLOCK,
+                  normalize: Optional[str] = None) -> BlockCsr:
+    """Cached :class:`BlockCsr` for ``g`` (build once per adjacency).
+
+    The cache is a small process-wide LRU; ``invalidate_block_csr`` drops
+    a graph's entries eagerly (``Engine.apply_delta`` calls it for the
+    pre-update graph on structural deltas so retired operands don't pin
+    memory until eviction).
+    """
+    key = (graph_fingerprint(g), normalize, block)
+    csr = _BLOCK_CSR_CACHE.get(key)
+    if csr is None:
+        csr = BlockCsr(g, block=block, normalize=normalize)
+        _BLOCK_CSR_CACHE[key] = csr
+        while len(_BLOCK_CSR_CACHE) > _BLOCK_CSR_CACHE_MAX:
+            _BLOCK_CSR_CACHE.popitem(last=False)
+    else:
+        _BLOCK_CSR_CACHE.move_to_end(key)
+    return csr
+
+
+def invalidate_block_csr(g: Graph) -> int:
+    """Drop every cached BlockCsr built for ``g``'s adjacency; returns the
+    number of entries removed."""
+    fp = graph_fingerprint(g)
+    stale = [k for k in _BLOCK_CSR_CACHE if k[0] == fp]
+    for k in stale:
+        del _BLOCK_CSR_CACHE[k]
+    return len(stale)
 
 
 def dequantize_features(codes: np.ndarray, scales: np.ndarray,

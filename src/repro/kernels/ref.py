@@ -35,6 +35,13 @@ def block_spmm_ref(blocks: jnp.ndarray, block_cols: jnp.ndarray,
     return jax.vmap(row_block)(jnp.arange(vb)).reshape(vb * b, f)
 
 
+def block_spmm_batched_ref(blocks, block_cols, block_mask,
+                           h: jnp.ndarray) -> jnp.ndarray:
+    """Feature-stack SpMM: out[b] = A @ h[b] for h f32[B, SB*B, F]."""
+    return jax.vmap(
+        lambda hb: block_spmm_ref(blocks, block_cols, block_mask, hb))(h)
+
+
 def dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray,
                 mins: jnp.ndarray) -> jnp.ndarray:
     """Row-wise linear dequantization: out[v, f] = codes[v, f]*scale[v]+min[v].
@@ -49,6 +56,16 @@ def dequant_spmm_ref(blocks, block_cols, block_mask, codes, scales,
     """Fused dequant + aggregate: out = A @ dequant(codes)."""
     h = dequant_ref(codes, scales, mins)
     return block_spmm_ref(blocks, block_cols, block_mask, h)
+
+
+def dequant_spmm_batched_ref(blocks, block_cols, block_mask, codes, scales,
+                             mins) -> jnp.ndarray:
+    """Fused batched variant: out[b] = A @ dequant(codes[b]).
+
+    codes uint[B, V, F]; scales/mins f32[B, V].
+    """
+    return jax.vmap(lambda c, s, m: dequant_spmm_ref(
+        blocks, block_cols, block_mask, c, s, m))(codes, scales, mins)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):

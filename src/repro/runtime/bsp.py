@@ -46,10 +46,19 @@ for those raises, ``"auto"`` silently falls back).
 Buffer conventions: all feature math is float32; padded vertex rows, edge
 slots, boundary rows and ELL tiles are zero-filled and masked (``*_mask``
 arrays, 1.0 = real), so every code path may blindly multiply-accumulate.
+
+Micro-batches run through ``bsp_apply_many`` / ``bsp_infer_many``: a
+stacked [B, V, F] feature batch becomes one [n, B, P, F] partition table
+(``PartitionedGraph.feature_stack``) and ONE shard_map launch serves the
+whole batch — one halo collective per layer, the batch-grid Pallas
+kernels on the GCN/SAGE kernel path, vmapped per-example layers on the
+segment-sum/GAT path — with every example bit-identical to the serial
+``bsp_apply`` (see docs/architecture.md §5 "Batched execution").
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import List, Optional
 
@@ -65,9 +74,11 @@ except AttributeError:  # older releases keep it under experimental
 
 from repro.api.registry import EXCHANGES
 from repro.gnn.graph import Graph
-from repro.gnn.layers import EdgeList, LAYER_FNS, masked_degree
-from repro.kernels.daq_dequant import dequant_spmm
+from repro.gnn.layers import (EdgeList, LAYER_FNS, apply_layer_with_sum,
+                              masked_degree)
+from repro.kernels.daq_dequant import dequant_spmm, dequant_spmm_batched
 from repro.kernels.gather_aggregate import (BLOCK, block_spmm,
+                                            block_spmm_batched,
                                             build_block_csr,
                                             padded_feature_dim)
 
@@ -211,6 +222,23 @@ class PartitionedGraph:
     def unpermute(self, out: np.ndarray) -> np.ndarray:
         """[n, P, D] stacked partition outputs -> [V, D] original order."""
         return out[self.part_of, self.slot_of]
+
+    def unpermute_stack(self, out: np.ndarray) -> np.ndarray:
+        """[n, B, P, D] batched partition outputs -> [B, V, D]."""
+        return np.moveaxis(out[self.part_of, :, self.slot_of], 0, 1)
+
+    def feature_stack(self, features: np.ndarray) -> np.ndarray:
+        """[B, V, F] micro-batch -> [n, B, P, F] per-partition tables.
+
+        The batched counterpart of ``with_features``: every example is
+        scattered into the same padded slot layout (padded rows zero), so
+        one shard_map launch serves the whole batch.
+        """
+        features = np.asarray(features, np.float32)
+        b, v, f = features.shape
+        feats = np.zeros((self.n, b, self.slots, f), np.float32)
+        feats[self.part_of, :, self.slot_of] = np.moveaxis(features, 0, 1)
+        return feats
 
     def with_features(self, features: np.ndarray) -> "PartitionedGraph":
         """Same layout (and block-CSR shards), fresh per-vertex features.
@@ -366,16 +394,16 @@ def build_partitioned(g: Graph, assignment: np.ndarray,
         local_csr=local_csr, halo_csr=halo_csr)
 
 
-def _layer_edges(pg: PartitionedGraph, senders, kind: str, self_senders,
+def _layer_edges(slots: int, senders, kind: str, self_senders,
                  receivers, emask, vmask):
     """EdgeList for one partition; GAT gets explicit self-edges."""
     if kind == "gat":
         s = jnp.concatenate([senders, self_senders])
         r = jnp.concatenate([receivers,
-                             jnp.arange(pg.slots, dtype=receivers.dtype)])
+                             jnp.arange(slots, dtype=receivers.dtype)])
         m = jnp.concatenate([emask, vmask])
-        return EdgeList(s, r, m, pg.slots)
-    return EdgeList(senders, receivers, emask, pg.slots)
+        return EdgeList(s, r, m, slots)
+    return EdgeList(senders, receivers, emask, slots)
 
 
 def _wire_quantize(h: jnp.ndarray, levels: float = 255.0):
@@ -383,20 +411,71 @@ def _wire_quantize(h: jnp.ndarray, levels: float = 255.0):
 
     Mirrors ``compression._quantize_rows`` at 8 bits: uint8 codes plus one
     f32 (scale, min) pair per row. All-zero (masked padding) rows get
-    code 0 / scale ~0 / min 0 and dequantize to exactly 0.
+    code 0 / scale ~0 / min 0 and dequantize to exactly 0. ``h`` may carry
+    leading batch axes (rows are the second-to-last axis): the reduction
+    runs over the feature (last) axis either way, so batched quantization
+    is bit-identical per row to the single-query call.
     """
-    mins = h.min(axis=1)
-    scales = jnp.maximum(h.max(axis=1) - mins, 1e-12) / levels
-    codes = jnp.clip(jnp.round((h - mins[:, None]) / scales[:, None]),
+    mins = h.min(axis=-1)
+    scales = jnp.maximum(h.max(axis=-1) - mins, 1e-12) / levels
+    codes = jnp.clip(jnp.round((h - mins[..., None]) / scales[..., None]),
                      0, levels).astype(jnp.uint8)
     return codes, scales, mins
 
 
 def _kernel_pad(x: jnp.ndarray, rows: int) -> jnp.ndarray:
     """Zero-pad a source table to the kernel grid: ``rows`` source rows
-    (multiple of BLOCK) and a feature count the f-tiling accepts."""
-    v, f = x.shape
-    return jnp.pad(x, ((0, rows - v), (0, padded_feature_dim(f) - f)))
+    (multiple of BLOCK) and a feature count the f-tiling accepts. ``x``
+    may be a [V, F] table or a stacked [B, V, F] micro-batch."""
+    v, f = x.shape[-2:]
+    pad = ((0, rows - v), (0, padded_feature_dim(f) - f))
+    if x.ndim == 3:
+        return jnp.pad(x, ((0, 0),) + pad)
+    return jnp.pad(x, pad)
+
+
+def _gathered_stack(x: jnp.ndarray) -> jnp.ndarray:
+    """[n, B, R, F...] all_gather output -> [B, n*R, F...] per-example
+    tables (pure data movement; rows land in the same order the serial
+    path's ``.reshape(-1, f)`` produces)."""
+    n, b = x.shape[:2]
+    return jnp.moveaxis(x, 0, 1).reshape((b, n * x.shape[2]) + x.shape[3:])
+
+
+#: Compiled shard_map programs, keyed by everything a program bakes in
+#: statically (model kind, exchange, aggregation path, mesh devices, the
+#: PartitionedGraph's static slot/row geometry). The model params and
+#: every per-partition buffer are traced *operands*, so one cached
+#: program serves every query — and every micro-batch size, since jit
+#: re-specializes on operand shapes under the same wrapper — instead of
+#: re-tracing and re-compiling the whole BSP program per call.
+_PROGRAM_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_PROGRAM_CACHE_MAX = 32
+
+
+def _cached_program(key: tuple, build):
+    fn = _PROGRAM_CACHE.get(key)
+    if fn is None:
+        fn = build()
+        _PROGRAM_CACHE[key] = fn
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
+            _PROGRAM_CACHE.popitem(last=False)
+    else:
+        _PROGRAM_CACHE.move_to_end(key)
+    return fn
+
+
+def _program_key(tag: str, kind: str, pg: PartitionedGraph, mesh: Mesh,
+                 axis: str, exchange: str, use_kernels: bool,
+                 halo_quant: bool, interpret: bool) -> tuple:
+    """Everything the shard program closes over statically."""
+    geometry = (pg.n, pg.slots, pg.boundary_slots,
+                None if pg.local_csr is None else pg.local_csr.src_rows,
+                None if pg.halo_csr is None else pg.halo_csr.src_rows)
+    mesh_key = (tuple(d.id for d in mesh.devices.flat),
+                tuple(mesh.axis_names))
+    return (tag, kind, axis, exchange, use_kernels, halo_quant, interpret,
+            geometry, mesh_key)
 
 
 def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
@@ -412,7 +491,6 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
     8 bytes/row instead of 4 bytes/feature.
     """
     _, layer_fn = LAYER_FNS[kind]
-    nlayers = len(params)
     mode = resolve_aggregation(aggregation, kind, exchange=exchange)
     use_kernels = mode == "pallas"
     if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
@@ -422,9 +500,16 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
     if halo_quant and not use_kernels:
         raise ValueError("halo_quant requires the 'pallas' aggregation path")
     interpret = jax.default_backend() != "tpu"
+    # Bind the layout statics to locals: shard_fn must NOT close over the
+    # PartitionedGraph itself, or the cached program (_PROGRAM_CACHE)
+    # would pin retired graphs' feature/tile buffers until LRU eviction.
+    slots = pg.slots
+    local_rows = None if pg.local_csr is None else pg.local_csr.src_rows
+    halo_rows = None if pg.halo_csr is None else pg.halo_csr.src_rows
 
-    def shard_fn(feats, vmask, s_g, s_h, recv, emask, brows, bmask,
+    def shard_fn(params, feats, vmask, s_g, s_h, recv, emask, brows, bmask,
                  self_g, self_h, *kops):
+        nlayers = len(params)
         # shard_map blocks: feats [1, P, F] etc. — squeeze the leading axis.
         h = feats[0]
         vm, sg, sh = vmask[0], s_g[0], s_h[0]
@@ -439,10 +524,10 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
             if exchange == "allgather":
                 h_all = jax.lax.all_gather(h, axis)          # [n, P, F]
                 h_src = h_all.reshape(-1, h.shape[-1])
-                edges = _layer_edges(pg, sg, kind, selg, rc, em, vm)
+                edges = _layer_edges(slots, sg, kind, selg, rc, em, vm)
             elif exchange == "halo":
                 hb = h[br] * bm[:, None]                      # [B, F]
-                edges = _layer_edges(pg, sh, kind, selh, rc, em, vm)
+                edges = _layer_edges(slots, sh, kind, selh, rc, em, vm)
                 if use_kernels:
                     # Kernel path: keep local and halo operands separate —
                     # sum-aggregate = local SpMM + halo SpMM — instead of
@@ -456,7 +541,7 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
                         # One collective for both row parameters.
                         sm = jax.lax.all_gather(
                             jnp.stack([sc, mn], axis=-1), axis).reshape(-1, 2)
-                        rows = pg.halo_csr.src_rows
+                        rows = halo_rows
                         codes = _kernel_pad(codes, rows)
                         sm = jnp.pad(sm, ((0, rows - sm.shape[0]), (0, 0)))
                         sc, mn = sm[:, 0], sm[:, 1]
@@ -464,23 +549,23 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
                         def halo_agg(_f=f):
                             return dequant_spmm(
                                 hblk, hcol, hmsk, codes, sc, mn,
-                                interpret=interpret)[:pg.slots, :_f]
+                                interpret=interpret)[:slots, :_f]
                     else:
                         halo = jax.lax.all_gather(
                             hb, axis).reshape(-1, h.shape[-1])
-                        halo = _kernel_pad(halo, pg.halo_csr.src_rows)
+                        halo = _kernel_pad(halo, halo_rows)
 
                         def halo_agg(_f=f):
                             return block_spmm(
                                 hblk, hcol, hmsk, halo,
-                                interpret=interpret)[:pg.slots, :_f]
+                                interpret=interpret)[:slots, :_f]
 
                     def kernel_sum(h_loc, edges_, h_src_=None, _f=f,
                                    _halo_agg=halo_agg):
-                        loc = _kernel_pad(h_loc, pg.local_csr.src_rows)
+                        loc = _kernel_pad(h_loc, local_rows)
                         out = block_spmm(lblk, lcol, lmsk, loc,
                                          interpret=interpret)
-                        return out[:pg.slots, :_f] + _halo_agg()
+                        return out[:slots, :_f] + _halo_agg()
 
                     if kind == "sage":   # SAGE aggregates the mean
                         def kernel_agg(h_loc, edges_, h_src_=None,
@@ -507,7 +592,10 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
 
     spec = P(axis, None, None)
     spec2 = P(axis, None)
-    in_specs = [spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
+    # P() as a pytree-prefix spec: the model params ride along as a fully
+    # replicated *operand* (not a closure constant), so the compiled
+    # program below is reusable across queries and plans.
+    in_specs = [P(), spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
                 spec2, spec2]
     operands = [jnp.asarray(pg.feats), jnp.asarray(pg.vertex_mask),
                 jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
@@ -525,9 +613,167 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
         # pallas_call has no shard_map replication rule; every operand and
         # output here is explicitly partitioned, so the check adds nothing.
         smap_kw["check_rep"] = False
-    fn = jax.jit(_shard_map(shard_fn, mesh=mesh, in_specs=tuple(in_specs),
-                            out_specs=spec, **smap_kw))
-    return fn(*operands)
+    fn = _cached_program(
+        _program_key("apply", kind, pg, mesh, axis, exchange, use_kernels,
+                     halo_quant, interpret),
+        lambda: jax.jit(_shard_map(shard_fn, mesh=mesh,
+                                   in_specs=tuple(in_specs),
+                                   out_specs=spec, **smap_kw)))
+    return fn(list(params), *operands)
+
+
+def bsp_apply_many(params, kind: str, pg: PartitionedGraph,
+                   feat_stack: np.ndarray, mesh: Mesh, axis: str = "fog",
+                   exchange: str = "halo", aggregation: str = "segment_sum",
+                   halo_quant: bool = False) -> jnp.ndarray:
+    """Distributed inference over a whole micro-batch in ONE traced call.
+
+    ``feat_stack`` is the [n, B, P, F] table from
+    ``PartitionedGraph.feature_stack``; returns [n, B, P, D]. The batch
+    rides every stage of the per-layer BSP step:
+
+      * collectives ship the stacked boundary rows — one all_gather per
+        layer for the whole batch instead of B (the wire payload is B x
+        bigger per sync, but the K*delta sync count stays that of a single
+        query);
+      * the kernel path aggregates with the batch-axis grid kernels
+        (``block_spmm_batched`` / ``dequant_spmm_batched``): one fused
+        dispatch per (layer, local/halo operand) with the block-CSR
+        operands and scalar-prefetched column table shared across the
+        batch, and the GCN/SAGE layer update broadcasting over the leading
+        axis;
+      * the segment-sum path (and GAT's per-layer attention re-weighting)
+        runs the per-example layer under ``jax.vmap`` — the vmapped edge-
+        weighted path — which XLA batches into one program.
+
+    Every per-example result is bit-identical to the serial ``bsp_apply``
+    (asserted by tests/test_batched_exec.py): vmap, broadcast dense
+    algebra and the batched kernels all preserve the per-example op
+    sequence.
+    """
+    _, layer_fn = LAYER_FNS[kind]
+    mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+    use_kernels = mode == "pallas"
+    if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
+        raise ValueError(
+            "aggregation='pallas' needs the block-CSR shards; rebuild the "
+            "PartitionedGraph with build_partitioned(..., build_blocks=True)")
+    if halo_quant and not use_kernels:
+        raise ValueError("halo_quant requires the 'pallas' aggregation path")
+    interpret = jax.default_backend() != "tpu"
+    # Bind the layout statics to locals: shard_fn must NOT close over the
+    # PartitionedGraph itself, or the cached program (_PROGRAM_CACHE)
+    # would pin retired graphs' feature/tile buffers until LRU eviction.
+    slots = pg.slots
+    local_rows = None if pg.local_csr is None else pg.local_csr.src_rows
+    halo_rows = None if pg.halo_csr is None else pg.halo_csr.src_rows
+
+    def shard_fn(params, feats, vmask, s_g, s_h, recv, emask, brows, bmask,
+                 self_g, self_h, *kops):
+        nlayers = len(params)
+        h = feats[0]                                   # [B, P, F]
+        vm, sg, sh = vmask[0], s_g[0], s_h[0]
+        rc, em = recv[0], emask[0]
+        br, bm = brows[0], bmask[0]
+        selg, selh = self_g[0], self_h[0]
+        if use_kernels:
+            lblk, lcol, lmsk, hblk, hcol, hmsk = (a[0] for a in kops)
+        for li, p in enumerate(params):
+            act_last = li == nlayers - 1
+            kwargs = {}
+            if exchange == "allgather":
+                h_all = jax.lax.all_gather(h, axis)    # [n, B, P, F]
+                h_src = _gathered_stack(h_all)          # [B, n*P, F]
+                edges = _layer_edges(slots, sg, kind, selg, rc, em, vm)
+            elif exchange == "halo":
+                hb = h[:, br] * bm[:, None]             # [B, Bnd, F]
+                edges = _layer_edges(slots, sh, kind, selh, rc, em, vm)
+                if use_kernels:
+                    f = h.shape[-1]
+                    h_src = None
+                    if halo_quant:
+                        codes, sc, mn = _wire_quantize(hb)
+                        codes = _gathered_stack(
+                            jax.lax.all_gather(codes, axis))   # [B, nB, F]
+                        sm = _gathered_stack(jax.lax.all_gather(
+                            jnp.stack([sc, mn], axis=-1), axis))  # [B,nB,2]
+                        rows = halo_rows
+                        codes = _kernel_pad(codes, rows)
+                        sm = jnp.pad(
+                            sm, ((0, 0), (0, rows - sm.shape[1]), (0, 0)))
+                        sc, mn = sm[..., 0], sm[..., 1]
+
+                        def halo_agg(_f=f):
+                            return dequant_spmm_batched(
+                                hblk, hcol, hmsk, codes, sc, mn,
+                                interpret=interpret)[:, :slots, :_f]
+                    else:
+                        halo = _gathered_stack(
+                            jax.lax.all_gather(hb, axis))
+                        halo = _kernel_pad(halo, halo_rows)
+
+                        def halo_agg(_f=f):
+                            return block_spmm_batched(
+                                hblk, hcol, hmsk, halo,
+                                interpret=interpret)[:, :slots, :_f]
+
+                    def kernel_sum(h_loc, _f=f, _halo_agg=halo_agg):
+                        loc = _kernel_pad(h_loc, local_rows)
+                        out = block_spmm_batched(lblk, lcol, lmsk, loc,
+                                                 interpret=interpret)
+                        return out[:, :slots, :_f] + _halo_agg()
+                else:
+                    halo = jax.lax.all_gather(hb, axis)   # [n, B, Bnd, F]
+                    h_src = jnp.concatenate(
+                        [h, _gathered_stack(halo)], axis=1)
+            else:
+                raise ValueError(exchange)
+            if act_last:
+                kwargs["activation"] = None
+            if use_kernels:
+                # Grid-axis kernel path: ONE fused batched SpMM dispatch
+                # computes every example's neighbor sum, then the shared
+                # dense tail (vmapped per example — see
+                # layers.apply_layer_with_sum for the bit-identity
+                # rationale).
+                h = apply_layer_with_sum(kind, p, h, edges, kernel_sum(h),
+                                         last=act_last)
+            else:
+                # Vmapped edge-weighted path: gathers/segment ops (and
+                # GAT's attention softmax) index vertex rows, so the
+                # per-example layer runs under vmap.
+                h = jax.vmap(lambda hh, ss, _p=p, _kw=kwargs: layer_fn(
+                    _p, hh, edges, h_src=ss, **_kw))(h, h_src)
+            h = h * vm[:, None]  # [B, P, F] * [P, 1]: padded rows stay 0
+        return h[None]
+
+    spec = P(axis, None, None, None)
+    spec2 = P(axis, None)
+    # Params ride as a replicated operand (P() pytree-prefix spec) so the
+    # compiled program is reusable — see _PROGRAM_CACHE.
+    in_specs = [P(), spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
+                spec2, spec2]
+    operands = [jnp.asarray(feat_stack), jnp.asarray(pg.vertex_mask),
+                jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
+                jnp.asarray(pg.receivers_local), jnp.asarray(pg.edge_mask),
+                jnp.asarray(pg.boundary_rows), jnp.asarray(pg.boundary_mask),
+                jnp.asarray(pg.self_senders_global),
+                jnp.asarray(pg.self_senders_halo)]
+    if use_kernels:
+        for csr in (pg.local_csr, pg.halo_csr):
+            for arr in (csr.blocks, csr.cols, csr.mask):
+                operands.append(jnp.asarray(arr))
+                in_specs.append(P(axis, *([None] * (arr.ndim - 1))))
+    smap_kw = {}
+    if use_kernels:
+        smap_kw["check_rep"] = False
+    fn = _cached_program(
+        _program_key("apply_many", kind, pg, mesh, axis, exchange,
+                     use_kernels, halo_quant, interpret),
+        lambda: jax.jit(_shard_map(shard_fn, mesh=mesh,
+                                   in_specs=tuple(in_specs),
+                                   out_specs=spec, **smap_kw)))
+    return fn(list(params), *operands)
 
 
 def bsp_infer(params, kind: str, g: Graph, assignment: np.ndarray,
@@ -560,6 +806,36 @@ def bsp_infer(params, kind: str, g: Graph, assignment: np.ndarray,
                                aggregation=aggregation,
                                halo_quant=halo_quant))
     return pg.unpermute(out)
+
+
+def bsp_infer_many(params, kind: str, feats: np.ndarray,
+                   pg: PartitionedGraph, mesh: Optional[Mesh] = None,
+                   exchange: str = "halo", axis: str = "fog",
+                   aggregation: str = "segment_sum",
+                   halo_quant: bool = False) -> np.ndarray:
+    """Batched end-to-end distributed inference -> [B, V, D].
+
+    ``feats`` is a [B, V, F] stacked micro-batch; the prebuilt ``pg``
+    supplies the layout (and block-CSR shards for the kernel path). One
+    shard_map launch serves the whole batch — see ``bsp_apply_many``.
+    """
+    feats = np.asarray(feats, np.float32)
+    if feats.ndim != 3:
+        raise ValueError(f"bsp_infer_many takes a [B, V, F] stack, got "
+                         f"shape {feats.shape}")
+    stack = pg.feature_stack(feats)
+    if mesh is None:
+        devs = np.array(jax.devices()[:pg.n])
+        if len(devs) != pg.n:
+            raise ValueError(
+                f"need {pg.n} devices for {pg.n} partitions, have "
+                f"{len(jax.devices())} — run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={pg.n}")
+        mesh = Mesh(devs, (axis,))
+    out = np.asarray(bsp_apply_many(params, kind, pg, stack, mesh, axis,
+                                    exchange, aggregation=aggregation,
+                                    halo_quant=halo_quant))
+    return pg.unpermute_stack(out)
 
 
 def exchange_bytes(pg: PartitionedGraph, feature_dim: int,

@@ -1,0 +1,364 @@
+"""Batch-axis executor parity: one fused dispatch == the serial loop.
+
+Covers the PR-5 tentpole: for every executor backend and model kind, the
+natively batched ``run_many`` (batch-grid Pallas kernels for GCN/SAGE's
+kernel path, the vmapped edge-weighted path for GAT and segment-sum)
+must be BIT-IDENTICAL to the serial per-request loop, and the kernel path
+must still agree with segment_sum within float tolerance. Plus edge
+cases: B=1 falls back to the serial path, empty shards inside a batch,
+block shapes that do not divide the vertex count, the DAQ quantized halo
+round-trip under the batch axis, and the keyed BlockCsr cache satellite.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Engine, Request
+from repro.api.registry import EXECUTORS
+from repro.core import partition
+from repro.gnn import datasets, models
+from repro.gnn.graph import Graph
+from repro.kernels import ops
+from repro.kernels.daq_dequant import dequant_spmm, dequant_spmm_batched
+from repro.kernels.gather_aggregate import (block_spmm, block_spmm_batched,
+                                            build_block_csr)
+from repro.runtime import bsp
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("siot", scale=0.05, seed=0)
+    return g
+
+
+def _feats(g, b, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(g.features + rng.normal(
+        scale=0.01, size=g.features.shape)).astype(np.float32)
+        for _ in range(b)]
+
+
+# ----------------------------------------------------------------------------
+# Single-program executors: batched == serial per aggregation path
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["sim", "single", "cloud"])
+@pytest.mark.parametrize("kind,aggregation", [
+    ("gcn", "pallas"), ("sage", "pallas"),
+    ("gcn", "segment_sum"), ("gat", "segment_sum")])
+def test_batched_bit_identical_to_serial(setup, executor, kind, aggregation):
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), kind,
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, kind), cluster="1A+2B+1C",
+                  executor=executor, aggregation=aggregation).compile(g)
+    backend = EXECUTORS.resolve(executor)
+    feats = _feats(g, 3)
+    batched = backend.run_many(plan, np.stack(feats),
+                               plan.placement.assignment, plan.partitioned,
+                               "halo", aggregation=aggregation)
+    serial = [backend.run(plan, f, plan.placement.assignment,
+                          plan.partitioned, "halo", aggregation=aggregation)
+              for f in feats]
+    assert len(batched) == 3
+    for a, b in zip(batched, serial):
+        assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage"])
+def test_batched_pallas_matches_segment_sum(setup, kind):
+    """The fused batched kernel path still agrees with the portable
+    segment-sum numerics (per-request, within float tolerance)."""
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), kind,
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, kind), cluster="1A+2B+1C").compile(g)
+    backend = EXECUTORS.resolve("sim")
+    feats = _feats(g, 3)
+    pal = backend.run_many(plan, np.stack(feats), plan.placement.assignment,
+                           plan.partitioned, "halo", aggregation="pallas")
+    seg = backend.run_many(plan, np.stack(feats), plan.placement.assignment,
+                           plan.partitioned, "halo",
+                           aggregation="segment_sum")
+    for a, b in zip(pal, seg):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_b1_takes_serial_path_and_reproduces_run(setup):
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C").compile(g)
+    backend = EXECUTORS.resolve("sim")
+    f = _feats(g, 1)[0]
+    for agg in ("segment_sum", "pallas"):
+        one = backend.run_many(plan, np.stack([f]),
+                               plan.placement.assignment, plan.partitioned,
+                               "halo", aggregation=agg)
+        ref = backend.run(plan, f, plan.placement.assignment,
+                          plan.partitioned, "halo", aggregation=agg)
+        assert len(one) == 1
+        assert np.array_equal(one[0], ref)
+
+
+def test_run_many_accepts_list_and_stack(setup):
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C").compile(g)
+    backend = EXECUTORS.resolve("sim")
+    feats = _feats(g, 3)
+    a = backend.run_many(plan, feats, plan.placement.assignment,
+                         plan.partitioned, "halo")
+    b = backend.run_many(plan, np.stack(feats), plan.placement.assignment,
+                         plan.partitioned, "halo")
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+def test_server_batched_pallas_bit_identical_to_session(setup):
+    """End to end: the Server's stacked micro-batch through the batched
+    kernel path == serial Session.query, bit for bit."""
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C",
+                  compressor="daq").compile(g)
+    feats = [None] + _feats(g, 3)
+    serial = [plan.session(aggregation="pallas").query(f) for f in feats]
+    server = plan.server(max_batch=4, max_wait=1e9, aggregation="pallas")
+    batched = server.replay([Request(features=f, arrival_time=0.0)
+                             for f in feats])
+    assert max(r.batch_size for r in batched) > 1
+    for b, s in zip(batched, serial):
+        assert np.array_equal(b.embeddings, s.embeddings)
+
+
+# ----------------------------------------------------------------------------
+# mesh-bsp: batched == serial on a real device mesh (subprocess so the
+# forced-host-device XLA flag never leaks)
+# ----------------------------------------------------------------------------
+
+def test_mesh_bsp_batched_parity_subprocess():
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.api import Engine, Request
+        from repro.gnn import datasets, models
+        g = datasets.load('siot', scale=0.05, seed=0)
+        for kind, compressor in [('gcn', 'none'), ('sage', 'daq'),
+                                 ('gat', 'none')]:
+            agg = 'segment_sum' if kind == 'gat' else 'pallas'
+            params = models.gnn_init(jax.random.PRNGKey(0), kind,
+                                     [g.feature_dim, 16, 8])
+            plan = Engine((params, kind), cluster='1A+2B+1C',
+                          compressor=compressor, executor='mesh-bsp',
+                          aggregation=agg).compile(g)
+            serial = [plan.session().query() for _ in range(3)]
+            batched = plan.server(max_batch=4, max_wait=1e9).replay(
+                [Request(arrival_time=0.0) for _ in range(3)])
+            assert batched[0].batch_size == 3
+            for b, s in zip(batched, serial):
+                assert np.array_equal(b.embeddings, s.embeddings), kind
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+# ----------------------------------------------------------------------------
+# Structural edge cases (kernel level, no mesh needed)
+# ----------------------------------------------------------------------------
+
+def _random_graph(v, e, f, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(0, v, e).astype(np.int32)
+    r = rng.integers(0, v, e).astype(np.int32)
+    order = np.lexsort((s, r))
+    s, r = s[order], r[order]
+    indptr = np.zeros(v + 1, np.int64)
+    np.add.at(indptr, r + 1, 1)
+    indptr = np.cumsum(indptr)
+    feats = rng.normal(size=(v, f)).astype(np.float32)
+    return Graph(num_vertices=v, senders=s, receivers=r, indptr=indptr,
+                 indices=s, features=feats)
+
+
+def _batched_shard_aggregate(pg, stack):
+    """Run each shard's batched local+halo SpMM exactly as the batched
+    shard_fn does; returns [B, V, F] in original vertex order."""
+    b, _, f = stack.shape
+    feats = pg.feature_stack(stack)                       # [n, B, P, F]
+    halo = np.zeros((pg.n, b, pg.boundary_slots, f), np.float32)
+    for q in range(pg.n):
+        halo[q] = feats[q][:, pg.boundary_rows[q]] * \
+            pg.boundary_mask[q][:, None]
+    halo_tab = np.moveaxis(halo, 0, 1).reshape(b, -1, f)  # [B, n*B, F]
+    out = np.zeros((pg.n, b, pg.slots, f), np.float32)
+    for p in range(pg.n):
+        loc = np.zeros((b, pg.local_csr.src_rows, f), np.float32)
+        loc[:, :pg.slots] = feats[p]
+        hal = np.zeros((b, pg.halo_csr.src_rows, f), np.float32)
+        hal[:, :halo_tab.shape[1]] = halo_tab
+        agg = np.asarray(block_spmm_batched(
+            jnp.asarray(pg.local_csr.blocks[p]),
+            jnp.asarray(pg.local_csr.cols[p]),
+            jnp.asarray(pg.local_csr.mask[p]), jnp.asarray(loc)))
+        agg = agg + np.asarray(block_spmm_batched(
+            jnp.asarray(pg.halo_csr.blocks[p]),
+            jnp.asarray(pg.halo_csr.cols[p]),
+            jnp.asarray(pg.halo_csr.mask[p]), jnp.asarray(hal)))
+        out[p] = agg[:, :pg.slots]
+    return pg.unpermute_stack(out)
+
+
+def _assert_batched_shards_match(g, assignment, b=3, seed=0):
+    rng = np.random.default_rng(seed)
+    stack = rng.normal(size=(b, g.num_vertices,
+                             g.feature_dim)).astype(np.float32)
+    pg = bsp.build_partitioned(g, assignment)
+    got = _batched_shard_aggregate(pg, stack)
+    for k in range(b):
+        want = np.zeros_like(stack[k])
+        np.add.at(want, g.receivers, stack[k][g.senders])
+        np.testing.assert_allclose(got[k], want, rtol=1e-4, atol=1e-4)
+    return pg
+
+
+def test_batched_kernels_empty_shard_in_batch():
+    g = _random_graph(60, 300, 12, seed=0)
+    assignment = np.where(np.arange(60) < 30, 0, 2)   # part 1 is empty
+    pg = _assert_batched_shards_match(g, assignment)
+    assert pg.vertex_mask[1].sum() == 0
+
+
+def test_batched_kernels_block_not_dividing_vertices():
+    g = _random_graph(130, 700, 20, seed=2)
+    assignment = (np.arange(130) % 2).astype(np.int64)
+    pg = _assert_batched_shards_match(g, assignment)
+    assert pg.slots % 128 != 0
+
+
+def test_batched_aggregate_traced_matches_per_example():
+    """ops.BlockCsr.aggregate_traced on a [B, V, F] stack == per-example
+    calls, bit for bit (non-128-multiple V and F)."""
+    g = _random_graph(200, 1200, 24, seed=3)
+    csr = ops.BlockCsr(g)
+    rng = np.random.default_rng(4)
+    stack = rng.normal(size=(4, 200, 24)).astype(np.float32)
+    got = np.asarray(csr.aggregate_traced(jnp.asarray(stack)))
+    assert got.shape == (4, 200, 24)
+    for k in range(4):
+        one = np.asarray(csr.aggregate_traced(jnp.asarray(stack[k])))
+        assert np.array_equal(got[k], one)
+
+
+def test_daq_halo_roundtrip_under_batch_axis():
+    """dequant_spmm_batched == per-example dequant_spmm (bitwise) and ==
+    dequantize-then-aggregate ground truth (quantization-bounded)."""
+    from repro.core.compression import _quantize_rows
+    g = _random_graph(200, 1200, 24, seed=5)
+    blocks, cols, mask, pv = build_block_csr(g.senders, g.receivers,
+                                             g.num_vertices)
+    rng = np.random.default_rng(6)
+    b = 3
+    cp = np.zeros((b, pv, 24), np.uint8)
+    sp = np.zeros((b, pv), np.float32)
+    mp = np.zeros((b, pv), np.float32)
+    raw = np.zeros((b, 200, 24), np.float64)
+    for k in range(b):
+        raw[k] = g.features + rng.normal(scale=0.01, size=g.features.shape)
+        q, mins, scales = _quantize_rows(raw[k], 8)
+        cp[k, :200] = q
+        sp[k, :200] = scales
+        mp[k, :200] = mins
+    fused = np.asarray(dequant_spmm_batched(
+        jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+        jnp.asarray(cp), jnp.asarray(sp), jnp.asarray(mp)))
+    for k in range(b):
+        one = np.asarray(dequant_spmm(
+            jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+            jnp.asarray(cp[k]), jnp.asarray(sp[k]), jnp.asarray(mp[k])))
+        assert np.array_equal(fused[k], one)
+        deq = cp[k, :200].astype(np.float32) * sp[k, :200, None] \
+            + mp[k, :200, None]
+        want = np.zeros((200, 24), np.float32)
+        np.add.at(want, g.receivers, deq[g.senders])
+        np.testing.assert_allclose(fused[k, :200], want, rtol=1e-4,
+                                   atol=1e-3)
+
+
+# ----------------------------------------------------------------------------
+# Keyed BlockCsr cache (satellite)
+# ----------------------------------------------------------------------------
+
+def test_block_csr_cache_shared_across_graph_copies():
+    g = _random_graph(150, 800, 16, seed=7)
+    a = ops.block_csr_for(g)
+    assert ops.block_csr_for(g) is a            # same adjacency -> cached
+    g2 = dataclasses.replace(
+        g, features=np.zeros_like(g.features))  # features don't matter
+    assert ops.block_csr_for(g2) is a
+    # a changed adjacency can never alias the cached operands
+    g3 = dataclasses.replace(g, senders=g.receivers, receivers=g.senders)
+    assert ops.block_csr_for(g3) is not a
+
+
+def test_block_csr_cache_invalidation():
+    g = _random_graph(150, 800, 16, seed=8)
+    a = ops.block_csr_for(g)
+    assert ops.invalidate_block_csr(g) == 1
+    assert ops.invalidate_block_csr(g) == 0     # already gone
+    assert ops.block_csr_for(g) is not a        # rebuilt on demand
+
+
+def test_session_override_does_not_rebuild_per_query(setup, monkeypatch):
+    """A Session aggregation override must hit the keyed cache on every
+    query instead of silently re-blocking the whole graph."""
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C",
+                  aggregation="segment_sum").compile(g)
+    builds = []
+    orig = ops.BlockCsr.__init__
+
+    def counting(self, *a, **kw):
+        builds.append(1)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(ops.BlockCsr, "__init__", counting)
+    ops.invalidate_block_csr(g)                 # cold start
+    sess = plan.session(aggregation="pallas")
+    for _ in range(3):
+        sess.query()
+    assert sum(builds) == 1                     # built once, then cached
+
+
+def test_apply_delta_invalidates_block_csr_cache(setup):
+    g = setup
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    engine = Engine((params, "gcn"), cluster="1A+2B+1C")
+    plan = engine.compile(g)
+    ops.block_csr_for(plan.graph)
+    from repro.api import GraphDelta
+    delta = GraphDelta(add_features=np.zeros((1, g.feature_dim),
+                                             np.float32),
+                       add_edges=np.array([[g.num_vertices, 0]]))
+    engine.apply_delta(plan, delta)
+    # The pre-update adjacency's entry was dropped eagerly.
+    assert ops.invalidate_block_csr(plan.graph) == 0

@@ -7,8 +7,10 @@ from _hypothesis_compat import given, settings, st  # optional dep:
 
 from repro.gnn import datasets
 from repro.kernels import ops, ref
-from repro.kernels.daq_dequant import dequant, dequant_spmm
-from repro.kernels.gather_aggregate import block_spmm, build_block_csr
+from repro.kernels.daq_dequant import (dequant, dequant_spmm,
+                                       dequant_spmm_batched)
+from repro.kernels.gather_aggregate import (block_spmm, block_spmm_batched,
+                                            build_block_csr)
 
 
 def _random_graph(n, e, seed):
@@ -50,6 +52,51 @@ def test_block_spmm_f_tiles(f_tile):
                                          jnp.asarray(cols),
                                          jnp.asarray(mask), jnp.asarray(h)))
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,n,e,f", [(2, 64, 256, 128), (3, 200, 1000, 128),
+                                     (4, 130, 700, 256)])
+def test_block_spmm_batched_matches_ref_and_serial(b, n, e, f):
+    """The batch-grid kernel == the vmapped oracle AND is bit-identical
+    per example to the unbatched kernel (the run_many contract)."""
+    s, r = _random_graph(n, e, 0)
+    blocks, cols, mask, pv = build_block_csr(s, r, n)
+    rng = np.random.default_rng(1)
+    h = np.zeros((b, pv, f), np.float32)
+    h[:, :n] = rng.normal(size=(b, n, f)).astype(np.float32)
+    out = np.asarray(block_spmm_batched(
+        jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+        jnp.asarray(h)))
+    want = np.asarray(ref.block_spmm_batched_ref(
+        jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+        jnp.asarray(h)))
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+    for k in range(b):
+        one = np.asarray(block_spmm(jnp.asarray(blocks), jnp.asarray(cols),
+                                    jnp.asarray(mask), jnp.asarray(h[k])))
+        assert np.array_equal(out[k], one)
+
+
+def test_dequant_spmm_batched_matches_ref_and_serial():
+    s, r = _random_graph(150, 800, 2)
+    blocks, cols, mask, pv = build_block_csr(s, r, 150)
+    rng = np.random.default_rng(3)
+    b, f = 3, 64
+    codes = rng.integers(0, 255, (b, pv, f)).astype(np.uint8)
+    sc = rng.uniform(1e-3, 0.1, (b, pv)).astype(np.float32)
+    mn = rng.normal(size=(b, pv)).astype(np.float32)
+    out = np.asarray(dequant_spmm_batched(
+        jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+        jnp.asarray(codes), jnp.asarray(sc), jnp.asarray(mn)))
+    want = np.asarray(ref.dequant_spmm_batched_ref(
+        jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+        jnp.asarray(codes), jnp.asarray(sc), jnp.asarray(mn)))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=2e-3)
+    for k in range(b):
+        one = np.asarray(dequant_spmm(
+            jnp.asarray(blocks), jnp.asarray(cols), jnp.asarray(mask),
+            jnp.asarray(codes[k]), jnp.asarray(sc[k]), jnp.asarray(mn[k])))
+        assert np.array_equal(out[k], one)
 
 
 @pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.uint32])

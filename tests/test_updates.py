@@ -522,8 +522,11 @@ def test_traces_mixed_validation():
 # Satellites: batched run_many, metis, lz4
 # ----------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["gcn", "sage"])
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gat"])
 def test_run_many_batched_fast_path_bit_identical(setup, kind):
+    """Every kind joins batched execution — GAT through the vmapped
+    edge-weighted path (its attention softmax re-weights edges per layer,
+    so it cannot use the pre-blocked kernel grid)."""
     g, _ = setup
     params = models.gnn_init(jax.random.PRNGKey(1), kind,
                              [g.feature_dim, 16, 8])
