@@ -1,0 +1,197 @@
+"""SLO benchmark: goodput and deadline-miss curves under overload.
+
+Sweeps arrival rate (as a multiple of the single-request sustainable
+rate) x SLO tightness x serving policy for the ``repro.api.Server``
+control plane (``repro.api.slo``) against the admit-all fixed-batch
+baseline on the *same* mixed-criticality Poisson trace, and writes the
+whole trajectory to ``BENCH_slo.json``.
+
+The workload is the paper's smart-IoT serving story under stress: a
+minority class of critical traffic (anomaly detection) with a tight
+latency budget rides on a majority class of background analytics with a
+loose one. Policies:
+
+  admit-all      Server(slo=None): FIFO, fixed max_batch, serves
+                 everything however late — the PR 2 baseline.
+  slo-fixed      Server(slo=SLOPolicy()): priority-first scheduling,
+                 deadline admission with the degradation ladder,
+                 rejection of hopeless requests.
+  slo-adaptive   slo-fixed + AdaptiveBatchController picking the
+                 micro-batch size from the measured latency curve.
+
+Acceptance guard (also run by scripts/ci.sh via --smoke): at >= 2x
+overload the control plane must achieve strictly higher goodput AND a
+strictly lower high-priority p95 than admit-all.
+
+    PYTHONPATH=src python benchmarks/slo.py            # full sweep
+    PYTHONPATH=src python benchmarks/slo.py --smoke    # CI guard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(REPO, "src", "repro")):
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+HI_PRIORITY = 2          # critical class rank (vs 0 for background)
+HI_FRACTION = 0.3        # fraction of traffic in the critical class
+LOOSE_FACTOR = 4.0       # background budget = LOOSE_FACTOR x critical budget
+
+
+def build_plan(args):
+    import jax
+
+    from repro.api import Engine
+    from repro.gnn import datasets, models
+
+    graph = datasets.load(args.dataset, scale=args.scale, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), args.kind,
+                             [graph.feature_dim, args.hidden, 8])
+    engine = Engine((params, args.kind), cluster=args.cluster,
+                    network=args.network, compressor=args.compressor)
+    return engine.compile(graph), graph
+
+
+def policies(args):
+    from repro.api.slo import SLOPolicy
+    return {
+        "admit-all": {},
+        "slo-fixed": {"slo": SLOPolicy()},
+        "slo-adaptive": {"slo": SLOPolicy(), "adaptive_batch": True},
+    }
+
+
+def run_policy(plan, trace, *, max_batch: int, server_kw: dict) -> dict:
+    from repro.api import Server
+    server = plan.server(max_batch=max_batch, max_wait=0.0, **server_kw)
+    t0 = time.perf_counter()
+    responses = server.replay(list(trace))
+    wall = time.perf_counter() - t0
+    out = Server.summarize(responses)
+    out["wall_s"] = wall
+    hi = out.get("priority_classes", {}).get(str(HI_PRIORITY), {})
+    out["hi_latency_p95_s"] = hi.get("latency_p95_s")
+    out["hi_goodput_rps"] = hi.get("goodput_rps")
+    out["hi_deadline_miss_rate"] = hi.get("deadline_miss_rate")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + pass/fail guard (for scripts/ci.sh)")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_slo.json"))
+    ap.add_argument("--dataset", default="siot")
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--kind", default="gcn")
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--cluster", default="1A+2B+1C")
+    ap.add_argument("--network", default="wifi")
+    ap.add_argument("--compressor", default="daq")
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--multipliers", type=float, nargs="+",
+                    default=[0.5, 1.0, 2.0, 4.0],
+                    help="arrival rate as a multiple of 1/service(B=1)")
+    ap.add_argument("--tightness", type=float, nargs="+", default=[3.0, 8.0],
+                    help="critical-class deadline in multiples of "
+                         "service(B=1); background gets LOOSE_FACTOR x that")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.scale = 0.05
+        args.requests = 48
+        args.multipliers = [2.5]
+        args.tightness = [3.0]
+        if args.out == ap.get_default("out"):   # don't dirty the worktree
+            import tempfile
+            args.out = os.path.join(tempfile.gettempdir(),
+                                    "BENCH_slo.smoke.json")
+
+    from repro.api import slo, traces
+
+    plan, graph = build_plan(args)
+    s1 = plan.session().account().total_latency
+    print(f"plan: |V|={graph.num_vertices} |E|={graph.num_edges} "
+          f"cluster={args.cluster} service(B=1)={s1 * 1e3:.1f}ms "
+          f"sustainable={1.0 / s1:.2f} rps requests={args.requests}")
+
+    sweep = []
+    print("policy,multiplier,tightness,goodput_rps,throughput_rps,"
+          "miss_rate,rejected,degraded,hi_p95_s")
+    for tight in args.tightness:
+        slo_fn = slo.slo_classes([
+            (HI_FRACTION, HI_PRIORITY, tight * s1),
+            (1.0 - HI_FRACTION, 0, LOOSE_FACTOR * tight * s1)])
+        for mult in args.multipliers:
+            rate = mult / s1
+            trace = traces.poisson(args.requests, rate, seed=args.seed,
+                                   slo_fn=slo_fn)
+            for name, kw in policies(args).items():
+                row = run_policy(plan, trace, max_batch=args.max_batch,
+                                 server_kw=kw)
+                row.update(policy=name, multiplier=mult, rate_rps=rate,
+                           tightness=tight)
+                sweep.append(row)
+                p95 = row["hi_latency_p95_s"]
+                print(f"{name},{mult},{tight},{row['goodput_rps']:.3f},"
+                      f"{row['throughput_rps']:.3f},"
+                      f"{row['deadline_miss_rate']:.3f},{row['rejected']},"
+                      f"{row['degraded']},"
+                      f"{'n/a' if p95 is None else f'{p95:.3f}'}")
+
+    payload = {
+        "benchmark": "slo_control_plane",
+        "config": {k: v for k, v in vars(args).items() if k != "smoke"},
+        "graph": {"vertices": graph.num_vertices, "edges": graph.num_edges},
+        "service_b1_s": s1,
+        "classes": {"hi": {"priority": HI_PRIORITY, "fraction": HI_FRACTION},
+                    "loose_factor": LOOSE_FACTOR},
+        "rows": sweep,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(sweep)} rows)")
+
+    # Acceptance guard: under overload (>= 2x sustainable) the control
+    # plane must beat admit-all on goodput AND high-priority tail latency.
+    by_key = {(r["policy"], r["multiplier"], r["tightness"]): r
+              for r in sweep}
+    failures = []
+    for tight in args.tightness:
+        for mult in args.multipliers:
+            if mult < 2.0:
+                continue
+            base = by_key[("admit-all", mult, tight)]
+            for name in ("slo-fixed", "slo-adaptive"):
+                row = by_key[(name, mult, tight)]
+                ok_goodput = row["goodput_rps"] > base["goodput_rps"]
+                ok_p95 = (row["hi_latency_p95_s"] is not None
+                          and base["hi_latency_p95_s"] is not None
+                          and row["hi_latency_p95_s"]
+                          < base["hi_latency_p95_s"])
+                print(f"guard mult={mult} tight={tight} {name}: "
+                      f"goodput {row['goodput_rps']:.3f} vs "
+                      f"{base['goodput_rps']:.3f} "
+                      f"({'ok' if ok_goodput else 'FAIL'}), "
+                      f"hi-p95 {row['hi_latency_p95_s']} vs "
+                      f"{base['hi_latency_p95_s']} "
+                      f"({'ok' if ok_p95 else 'FAIL'})")
+                if not (ok_goodput and ok_p95):
+                    failures.append((name, mult, tight))
+    if failures:
+        print(f"FAIL: control plane lost to admit-all at {failures}")
+        return 1
+    print("PASS: control plane beats admit-all under overload "
+          "(goodput up, high-priority p95 down)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,3 +18,6 @@ PYTHONPATH=src python benchmarks/updates.py --smoke
 # Batch-axis executor dispatch: batched run_many must stay bit-identical
 # to the serial per-request loop (and beat it at B>=8).
 PYTHONPATH=src python benchmarks/serving_latency.py --smoke
+# SLO control plane: under >= 2x overload the deadline/priority/degradation
+# server must beat admit-all on goodput AND high-priority tail latency.
+PYTHONPATH=src python benchmarks/slo.py --smoke

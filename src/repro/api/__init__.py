@@ -25,8 +25,13 @@ _LAZY = {
     "GraphDelta": "repro.api.updates",
     "UpdateRequest": "repro.api.updates",
     "UpdateReport": "repro.api.updates",
+    "SLOPolicy": "repro.api.slo",
+    "DegradationLevel": "repro.api.slo",
+    "AdaptiveBatchController": "repro.api.slo",
+    "Rejection": "repro.api.slo",
     "traces": "repro.api.traces",   # submodule: resolves to the module
     "updates": "repro.api.updates",  # submodule: resolves to the module
+    "slo": "repro.api.slo",          # submodule: resolves to the module
 }
 
 __all__ = sorted(["Registry", "UnknownComponentError", "ALL_REGISTRIES",

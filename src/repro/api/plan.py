@@ -114,19 +114,60 @@ class Plan:
         return np.bincount(self.placement.assignment,
                            minlength=self.num_fogs)
 
+    def with_overrides(self, *, compressor: Optional[str] = None,
+                       num_layers: Optional[int] = None) -> "Plan":
+        """Derive a plan with degraded serving knobs, sharing every frozen
+        buffer of this one.
+
+        ``compressor`` swaps the upload codec (the derived config is what
+        executors' wire-format decisions and the latency accounting read,
+        so e.g. ``"uniform8"`` consistently disables the DAQ-fused halo
+        wire); ``num_layers`` truncates the GNN to its first ``L`` layers
+        (the truncated last layer serves logits, matching a model trained
+        at that depth's op sequence) and re-prices the cluster's per-query
+        workload at ``L`` layers. The graph, placement and partitioned
+        buffers are shared — this is a cheap view, not a recompile. It is
+        the mechanism behind the SLO control plane's degradation ladder
+        (``repro.api.slo``) and the ``Session(compressor=, num_layers=)``
+        overrides.
+        """
+        changes = {}
+        if compressor is not None:
+            from repro.api.registry import COMPRESSORS
+            COMPRESSORS.resolve(compressor)   # fail fast on bad keys
+            key = COMPRESSORS.canonical(compressor)
+            if key != self.config.compressor:
+                changes["config"] = self.config.with_overrides(
+                    compressor=key)
+        if num_layers is not None:
+            k = self.model.num_layers
+            if not 1 <= num_layers <= k:
+                raise ValueError(f"num_layers must be in [1, {k}], "
+                                 f"got {num_layers}")
+            if num_layers < k:
+                changes["model"] = ModelSpec(
+                    params=self.model.params[:num_layers],
+                    kind=self.model.kind)
+                changes["cluster"] = dataclasses.replace(
+                    self.cluster, k_layers=num_layers)
+        return dataclasses.replace(self, **changes) if changes else self
+
     def session(self, **kw) -> "Session":
         """Open a serving session (owns all mutable runtime state)."""
         from repro.api.session import Session
         return Session(self, **kw)
 
     def server(self, *, max_batch: int = 8, max_wait: float = 0.0,
-               pipelined: bool = True, **session_kw) -> "Server":
+               pipelined: bool = True, slo=None, adaptive_batch=None,
+               **session_kw) -> "Server":
         """Open a request-level server (micro-batching + pipelined
-        collect/execute) over a fresh session; extra kwargs go to
-        ``session()``."""
+        collect/execute) over a fresh session; ``slo``/``adaptive_batch``
+        activate the SLO control plane (``repro.api.slo``); extra kwargs
+        go to ``session()``."""
         from repro.api.server import Server
         return Server(self.session(**session_kw), max_batch=max_batch,
-                      max_wait=max_wait, pipelined=pipelined)
+                      max_wait=max_wait, pipelined=pipelined, slo=slo,
+                      adaptive_batch=adaptive_batch)
 
     def describe(self) -> dict:
         """Plain-dict summary (for logs / dashboards)."""

@@ -67,10 +67,19 @@ class Session:
     see the mutated graph), "deferred" buffers deltas and coalesces them
     into one repair at the next ``flush_updates()`` — queries served in
     between read the stale graph (bounded staleness, amortized repair).
+
+    ``compressor`` and ``num_layers`` are degraded-serving overrides: the
+    session serves ``plan.with_overrides(...)`` — same graph, placement
+    and partitioned buffers, but a swapped upload codec and/or a
+    truncated layer stack. These are the knobs the SLO control plane's
+    degradation ladder turns (``repro.api.slo``); a session configured
+    with them directly is bit-identical to the server's degraded path.
     """
 
     def __init__(self, plan, *, executor: Optional[str] = None,
                  aggregation: Optional[str] = None,
+                 compressor: Optional[str] = None,
+                 num_layers: Optional[int] = None,
                  lam: float = 1.3, theta: float = 0.5,
                  adapt_every: int = 0,
                  accuracy_fn: Optional[Callable[[np.ndarray], float]] = None,
@@ -79,6 +88,13 @@ class Session:
         if updates not in ("sync", "deferred"):
             raise ValueError(f"updates must be 'sync' or 'deferred', "
                              f"got {updates!r}")
+        # Degraded-serving knobs (the SLO control plane's ladder rungs):
+        # the session serves a derived plan sharing this plan's buffers,
+        # so the compressor swap / layer truncation is consistent across
+        # collection, execution, wire accounting and latency pricing.
+        if compressor is not None or num_layers is not None:
+            plan = plan.with_overrides(compressor=compressor,
+                                       num_layers=num_layers)
         self.plan = plan
         self.update_policy = updates
         self._pending_deltas: list = []

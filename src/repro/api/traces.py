@@ -18,10 +18,18 @@ Each generator returns a list of ``Request`` objects with nondecreasing
 ``features_fn(i, rng)`` optionally attaches fresh per-request feature
 uploads (e.g. noisy sensor readings); by default requests re-serve the
 graph's stored features (``features=None``).
+
+SLO annotations (read by the Server's control plane, ``repro.api.slo``):
+every generator takes ``deadline=`` / ``priority=`` to stamp the whole
+trace with one latency budget and class rank, or ``slo_fn(i, rng) ->
+(deadline, priority)`` for per-request annotations — e.g. the output of
+``repro.api.slo.slo_classes`` for a weighted mix of service classes.
+``slo_fn`` wins over the scalar kwargs; in ``mixed`` traces it annotates
+updates too.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -30,48 +38,69 @@ from repro.api.updates import GraphDelta, UpdateRequest
 
 FeaturesFn = Callable[[int, np.random.Generator], Optional[np.ndarray]]
 DeltaFn = Callable[[int, np.random.Generator], GraphDelta]
+#: (index, rng) -> (deadline seconds or None, priority)
+SloFn = Callable[[int, np.random.Generator], Tuple[Optional[float], int]]
+
+
+def _slo_of(i: int, rng: np.random.Generator, slo_fn: Optional[SloFn],
+            deadline: Optional[float], priority: int
+            ) -> Tuple[Optional[float], int]:
+    if slo_fn is None:
+        return deadline, priority
+    d, p = slo_fn(i, rng)
+    return (None if d is None else float(d)), int(p)
 
 
 def _build(arrivals: np.ndarray, features_fn: Optional[FeaturesFn],
-           rng: np.random.Generator, executor: Optional[str]) -> List[Request]:
+           rng: np.random.Generator, executor: Optional[str],
+           deadline: Optional[float] = None, priority: int = 0,
+           slo_fn: Optional[SloFn] = None) -> List[Request]:
     out = []
     for i, t in enumerate(np.asarray(arrivals, float)):
         feats = None if features_fn is None else features_fn(i, rng)
+        d, p = _slo_of(i, rng, slo_fn, deadline, priority)
         # request_id stays None: the Server assigns ids at submit() in
         # submission order, so they stay unique even when one server
         # replays several traces back to back.
         out.append(Request(features=feats, arrival_time=float(t),
-                           executor=executor))
+                           executor=executor, deadline=d, priority=p))
     return out
 
 
 def poisson(n: int, rate: float, *, seed: int = 0,
             features_fn: Optional[FeaturesFn] = None,
             executor: Optional[str] = None,
+            deadline: Optional[float] = None, priority: int = 0,
+            slo_fn: Optional[SloFn] = None,
             start: float = 0.0) -> List[Request]:
     """``n`` Poisson arrivals at ``rate`` req/s (exponential gaps)."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n)
-    return _build(start + np.cumsum(gaps), features_fn, rng, executor)
+    return _build(start + np.cumsum(gaps), features_fn, rng, executor,
+                  deadline, priority, slo_fn)
 
 
 def constant(n: int, rate: float, *, seed: int = 0,
              features_fn: Optional[FeaturesFn] = None,
              executor: Optional[str] = None,
+             deadline: Optional[float] = None, priority: int = 0,
+             slo_fn: Optional[SloFn] = None,
              start: float = 0.0) -> List[Request]:
     """``n`` deterministic arrivals spaced exactly ``1/rate`` apart."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     rng = np.random.default_rng(seed)
     return _build(start + np.arange(1, n + 1) / rate, features_fn, rng,
-                  executor)
+                  executor, deadline, priority, slo_fn)
 
 
 def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
            seed: int = 0, features_fn: Optional[FeaturesFn] = None,
            executor: Optional[str] = None,
+           deadline: Optional[float] = None, priority: int = 0,
+           slo_fn: Optional[SloFn] = None,
            start: float = 0.0) -> List[Request]:
     """``n`` arrivals in bursts of ~``burst`` near-simultaneous requests.
 
@@ -86,13 +115,16 @@ def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
     rng = np.random.default_rng(seed)
     base = start + (np.arange(n) // burst + 1) * (burst / rate)
     arrivals = np.sort(base + rng.exponential(jitter, size=n))
-    return _build(arrivals, features_fn, rng, executor)
+    return _build(arrivals, features_fn, rng, executor, deadline, priority,
+                  slo_fn)
 
 
 def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
           update_fraction: float = 0.2, seed: int = 0,
           features_fn: Optional[FeaturesFn] = None,
           executor: Optional[str] = None,
+          deadline: Optional[float] = None, priority: int = 0,
+          slo_fn: Optional[SloFn] = None,
           start: float = 0.0) -> List[Union[Request, UpdateRequest]]:
     """``n`` Poisson arrivals; each is a graph update with probability
     ``update_fraction`` (its ``GraphDelta`` built by ``delta_fn(i, rng)``),
@@ -101,6 +133,8 @@ def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
     Updates are applied in arrival order, so ``delta_fn`` must produce
     deltas valid against the *sequentially updated* graph (deltas that
     only touch edges/features of stable vertex ids are the easy case).
+    SLO annotations land on updates too: the control plane prices an
+    update's repair and can reject one whose deadline is unmeetable.
     """
     if not 0.0 <= update_fraction <= 1.0:
         raise ValueError(f"update_fraction must be in [0, 1], "
@@ -112,11 +146,13 @@ def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
     is_update = rng.random(n) < update_fraction
     out: List[Union[Request, UpdateRequest]] = []
     for i, t in enumerate(arrivals):
+        d, p = _slo_of(i, rng, slo_fn, deadline, priority)
         if is_update[i]:
             out.append(UpdateRequest(delta=delta_fn(i, rng),
-                                     arrival_time=float(t)))
+                                     arrival_time=float(t),
+                                     deadline=d, priority=p))
         else:
             feats = None if features_fn is None else features_fn(i, rng)
             out.append(Request(features=feats, arrival_time=float(t),
-                               executor=executor))
+                               executor=executor, deadline=d, priority=p))
     return out

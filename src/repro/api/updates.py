@@ -204,9 +204,17 @@ class UpdateRequest:
     Mirrors ``server.Request``: ``arrival_time`` is on the simulated clock
     (None = ready at admission); ids are assigned at ``submit`` from the
     same counter as query requests, so a mixed trace has one id space.
+    ``deadline`` is a latency budget in simulated seconds from arrival and
+    ``priority`` a class rank (higher = more important) — both read by the
+    SLO control plane (``repro.api.slo``), which prices the delta's repair
+    time on the serving clock and may reject an update whose repair cannot
+    finish inside its deadline. Updates are never degraded (a partial
+    repair has no meaning) and never reordered across queries.
     """
     delta: GraphDelta
     arrival_time: Optional[float] = None
+    deadline: Optional[float] = None
+    priority: int = 0
     request_id: Optional[int] = None
 
 

@@ -417,6 +417,52 @@ def schedule_state(sched: BatchSchedule) -> Tuple[float, float, float]:
     return (sched.collect_end, sched.execute_end, sched.execute_start)
 
 
+# ----------------------------------------------------------------------------
+# Dynamic-graph update pricing (the serving control plane's admission input)
+# ----------------------------------------------------------------------------
+
+# Fixed control overhead of one repair: delta folding, placement bookkeeping,
+# and the repartitioner's greedy pass — independent of delta size.
+UPDATE_BASE_S = 0.02
+# Rebuild work per touched vertex/edge, in flop-equivalents priced against
+# the cluster's mean capability: dirty-shard block-CSR re-packing reads each
+# touched vertex's feature row and each touched edge's adjacency entry a
+# small constant number of times.
+UPDATE_VERTEX_FLOPS = 64.0
+UPDATE_EDGE_FLOPS = 16.0
+
+
+def simulate_update(cluster: FogCluster, delta) -> float:
+    """Price one graph-delta repair on the simulated serving clock.
+
+    ``delta`` is any object with the :class:`repro.api.updates.GraphDelta`
+    shape accessors (``num_added_vertices``, ``remove_vertices``,
+    ``add_edges``, ``remove_edges``, ``feature_ids``, ``is_structural``) —
+    duck-typed so this core module stays import-free of ``repro.api``.
+
+    The price mirrors the incremental-repair stages: (a) fixed control
+    overhead, (b) uploading new/updated feature rows over the LAN,
+    (c) dirty-shard rebuild compute on the cluster's mean-capability fog,
+    and (d) one BSP synchronization round when the delta is structural
+    (repartition + halo table swap must quiesce the superstep). Updates
+    serialize with execution in the ``Server``'s pipeline, so this is the
+    time the execution stage is blocked.
+    """
+    g = cluster.graph
+    touched_v = (delta.num_added_vertices + delta.num_removed_vertices
+                 + len(delta.feature_ids))
+    touched_e = len(delta.add_edges) + len(delta.remove_edges)
+    uploads = delta.num_added_vertices + len(delta.feature_ids)
+    wire = uploads * (g.feature_dim * 8.0 + PROTOCOL_BYTES_PER_VERTEX)
+    collect = wire / NETWORKS[cluster.network]["lan"]
+    mean_cap = float(np.mean([n.effective_capability
+                              for n in cluster.nodes]))
+    rebuild = (UPDATE_VERTEX_FLOPS * touched_v * g.feature_dim
+               + UPDATE_EDGE_FLOPS * touched_e) / mean_cap
+    sync = cluster.sync_cost if delta.is_structural else 0.0
+    return UPDATE_BASE_S + collect + rebuild + sync
+
+
 def apply_load_trace(cluster: FogCluster, loads: Sequence[float]) -> None:
     for node, load in zip(cluster.nodes, loads):
         node.background_load = float(load)

@@ -1,0 +1,408 @@
+"""SLO control plane: admission, degradation ladder, priorities, adaptive B.
+
+The load-bearing guarantees:
+  * the accept path of an SLO server is bit-identical to the plain
+    admit-all server (the control plane prices, it never perturbs);
+  * a degraded response is bit-identical to a Session configured with the
+    same rung's knobs directly (the ladder is views, not approximations);
+  * hopeless requests become Rejections (or late responses when
+    ``reject_hopeless=False``) — never silent drops;
+  * priority reordering never crosses a graph update (mutation visibility
+    stays FIFO-consistent);
+  * the adaptive batch controller converges to the efficiency-optimal
+    batch size on a known curve and respects deadline slack.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Engine, GraphDelta, Request, Server, UpdateRequest, slo
+from repro.api import traces
+from repro.api.server import Response, UpdateResponse
+from repro.api.session import Session
+from repro.api.slo import (AdaptiveBatchController, DegradationLevel,
+                           Rejection, SLOPolicy)
+from repro.core import simulation
+from repro.gnn import datasets, models
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("siot", scale=0.06, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 32, 8])
+    plan = Engine((params, "gcn"), cluster="1A+2B+1C",
+                  compressor="daq").compile(g)
+    return g, params, plan
+
+
+def _svc(plan, **knobs):
+    """Level service time for one request on the sim executor."""
+    return plan.session(**knobs).account("sim").total_latency
+
+
+# ----------------------------------------------------------------------------
+# Ladder construction
+# ----------------------------------------------------------------------------
+
+def test_default_ladder_for_daq_plan(setup):
+    g, params, plan = setup
+    ladder = slo.default_ladder(plan.session())
+    # auto-aggregation resolves to segment_sum off-TPU: no pallas rung;
+    # daq plan: uniform8 rung; then layer truncation down to 1.
+    assert [r.name for r in ladder] == ["uniform8", "layers1"]
+    assert ladder[0].compressor == "uniform8"
+    assert ladder[1].knobs() == {"compressor": "uniform8", "num_layers": 1}
+
+
+def test_default_ladder_strict_pallas_gets_segment_sum_rung(setup):
+    g, params, plan = setup
+    ladder = slo.default_ladder(plan.session(aggregation="pallas"))
+    assert ladder[0].name == "segment_sum"
+    assert ladder[0].aggregation == "segment_sum"
+    # cumulative: later rungs keep the aggregation fallback
+    assert all(r.aggregation == "segment_sum" for r in ladder)
+
+
+# ----------------------------------------------------------------------------
+# Admission: accept / degrade / reject
+# ----------------------------------------------------------------------------
+
+def test_accept_path_bit_identical_to_plain_server(setup):
+    g, params, plan = setup
+    trace = traces.poisson(10, rate=50.0, seed=1, deadline=1e3)
+    plain = plan.server(max_batch=4, max_wait=0.05).replay(trace)
+    gated = plan.server(max_batch=4, max_wait=0.05, slo=True).replay(trace)
+    assert len(plain) == len(gated)
+    for a, b in zip(plain, gated):
+        assert np.array_equal(a.embeddings, b.embeddings)
+        assert a.batch_size == b.batch_size
+        assert a.latency == pytest.approx(b.latency)
+        assert b.degradation == 0 and b.deadline_met is True
+
+
+def test_degraded_response_bit_identical_to_configured_session(setup):
+    g, params, plan = setup
+    s_levels = [_svc(plan),
+                _svc(plan, compressor="uniform8"),
+                _svc(plan, compressor="uniform8", num_layers=1)]
+    assert s_levels[2] < min(s_levels[:2])   # the layer rung is the lever
+    deadline = (s_levels[2] + min(s_levels[:2])) / 2.0
+    server = plan.server(max_batch=1, slo=True)
+    [resp] = server.replay([Request(arrival_time=0.0, deadline=deadline)])
+    assert isinstance(resp, Response)
+    assert resp.degradation == 2          # smallest rung that fits
+    assert resp.deadline_met is True
+    assert resp.latency <= deadline + 1e-9
+    direct = plan.session(compressor="uniform8", num_layers=1).query()
+    assert np.array_equal(resp.embeddings, direct.embeddings)
+    assert resp.latency == pytest.approx(direct.latency)
+
+
+def test_hopeless_request_rejected(setup):
+    g, params, plan = setup
+    best = _svc(plan, compressor="uniform8", num_layers=1)
+    server = plan.server(max_batch=1, slo=True)
+    [rej] = server.replay([Request(arrival_time=0.0, deadline=best / 10)])
+    assert isinstance(rej, Rejection)
+    assert rej.kind == "query" and rej.reason == "deadline"
+    assert rej.estimated_latency > rej.deadline
+
+
+def test_reject_hopeless_false_serves_late_at_last_rung(setup):
+    g, params, plan = setup
+    best = _svc(plan, compressor="uniform8", num_layers=1)
+    policy = SLOPolicy(reject_hopeless=False)
+    server = plan.server(max_batch=1, slo=policy)
+    [resp] = server.replay([Request(arrival_time=0.0, deadline=best / 10)])
+    assert isinstance(resp, Response)
+    assert resp.deadline_met is False
+    assert resp.degradation == len(server.ladder)
+
+
+def test_rejection_rescues_batch_neighbours(setup):
+    g, params, plan = setup
+    s1 = _svc(plan)   # one-request service at the native rung
+    # Two simultaneous arrivals: one impossible, one with room for a
+    # b=1 native serve but not for b=2. Rejecting the hopeless member
+    # must rescue the other at degradation 0.
+    trace = [Request(arrival_time=0.0, deadline=1e-6),
+             Request(arrival_time=0.0, deadline=s1 * 1.5)]
+    out = plan.server(max_batch=2, max_wait=1e9, slo=True).replay(trace)
+    kinds = {type(r) for r in out}
+    assert kinds == {Rejection, Response}
+    resp = next(r for r in out if isinstance(r, Response))
+    assert resp.batch_size == 1 and resp.deadline_met is True
+
+
+def test_best_effort_requests_never_rejected_or_degraded(setup):
+    g, params, plan = setup
+    out = plan.server(max_batch=4, slo=True).replay(
+        traces.poisson(8, rate=100.0, seed=3))   # no deadlines: overload ok
+    assert all(isinstance(r, Response) for r in out)
+    assert all(r.degradation == 0 and r.deadline_met is None for r in out)
+
+
+# ----------------------------------------------------------------------------
+# Priority ordering
+# ----------------------------------------------------------------------------
+
+def test_priority_classes_served_high_first(setup):
+    g, params, plan = setup
+    prios = [0, 3, 1, 3, 0]
+    trace = [Request(arrival_time=0.0, priority=p) for p in prios]
+    out = plan.server(max_batch=1, slo=True).replay(trace)
+    assert [r.request_id for r in out] == [1, 3, 2, 0, 4]
+    starts = [r.service_start for r in out]
+    assert starts == sorted(starts)
+
+
+def test_priority_never_crosses_update_boundary(setup):
+    g, params, plan = setup
+    delta = GraphDelta(feature_ids=[0], feature_values=g.features[:1] * 2.0)
+    server = plan.server(max_batch=1, slo=True)
+    server.submit(Request(arrival_time=0.0, priority=0))
+    server.submit(Request(arrival_time=0.0, priority=9))
+    server.submit(UpdateRequest(delta=delta, arrival_time=0.5))
+    server.submit(Request(arrival_time=0.6, priority=0))
+    server.submit(Request(arrival_time=0.6, priority=9))
+    out = server.drain()
+    # Simultaneous arrivals reorder [0, 9] -> [9, 0] within each segment;
+    # the update keeps its arrival position between them.
+    assert [type(r).__name__ for r in out] == [
+        "Response", "Response", "UpdateResponse", "Response", "Response"]
+    assert [r.priority for r in out if isinstance(r, Response)] == [9, 0,
+                                                                    9, 0]
+
+
+def test_backlogged_update_not_preempted_by_priority(setup):
+    g, params, plan = setup
+    delta = GraphDelta(feature_ids=[0], feature_values=g.features[:1] * 2.0)
+    server = plan.server(max_batch=1, slo=True)
+    # The first query occupies the pipeline past both later arrivals, so
+    # by the time the update is schedulable the high-priority query is
+    # queued too — it still must not jump the update barrier.
+    server.submit(Request(arrival_time=0.0, priority=0))
+    server.submit(UpdateRequest(delta=delta, arrival_time=0.01))
+    server.submit(Request(arrival_time=0.02, priority=9))
+    out = server.drain()
+    assert [type(r).__name__ for r in out] == [
+        "Response", "UpdateResponse", "Response"]
+
+
+def test_future_arrival_does_not_starve_queued_work(setup):
+    g, params, plan = setup
+    s1 = _svc(plan)
+    server = plan.server(max_batch=1, slo=True)
+    # A low-priority request queued now beats a high-priority request
+    # that only arrives later: priority is not a time machine.
+    server.submit(Request(arrival_time=0.0, priority=0))
+    server.submit(Request(arrival_time=10 * s1, priority=9))
+    out = server.drain()
+    assert [r.priority for r in out] == [0, 9]
+    assert out[0].service_start < 10 * s1
+
+
+# ----------------------------------------------------------------------------
+# Priced updates
+# ----------------------------------------------------------------------------
+
+def test_update_is_priced_on_the_serving_clock(setup):
+    g, params, plan = setup
+    delta = GraphDelta(feature_ids=[0], feature_values=g.features[:1] * 2.0)
+    server = plan.server(max_batch=1, slo=True)
+    server.submit(UpdateRequest(delta=delta, arrival_time=0.0))
+    server.submit(Request(arrival_time=0.0))
+    upd, resp = server.drain()
+    assert isinstance(upd, UpdateResponse) and upd.applied
+    assert upd.service_time >= simulation.UPDATE_BASE_S
+    assert upd.finish_time == pytest.approx(upd.service_time)
+    # The repair occupied the pipeline: the query finishes after it.
+    assert resp.finish_time > upd.finish_time
+
+
+def test_update_free_without_control_plane(setup):
+    g, params, plan = setup
+    delta = GraphDelta(feature_ids=[0], feature_values=g.features[:1] * 2.0)
+    server = plan.server(max_batch=1)
+    [upd] = server.replay([UpdateRequest(delta=delta, arrival_time=0.0)])
+    assert upd.service_time == 0.0 and upd.finish_time == 0.0
+
+
+def test_hopeless_update_rejected_without_mutating_graph(setup):
+    g, params, plan = setup
+    v = plan.graph.num_vertices
+    delta = GraphDelta(add_features=np.zeros((1, g.feature_dim), np.float32),
+                       add_edges=[[v, 0]])
+    server = plan.server(max_batch=1, slo=True)
+    baseline = plan.session().query().embeddings
+    [rej] = server.replay([UpdateRequest(delta=delta, arrival_time=0.0,
+                                         deadline=1e-6)])
+    assert isinstance(rej, Rejection) and rej.kind == "update"
+    assert server.session.plan.graph.num_vertices == v
+    [resp] = server.replay([Request(arrival_time=0.0)])
+    assert np.array_equal(resp.embeddings, baseline)
+
+
+# ----------------------------------------------------------------------------
+# Deadline-aware batch close (active even without a policy)
+# ----------------------------------------------------------------------------
+
+def test_deadline_closes_open_batch_early(setup):
+    g, params, plan = setup
+    s1, s2 = (plan.session().account("sim", batch_size=b).total_latency
+              for b in (1, 2))
+    deadline = (s1 + s2) / 2.0   # fits alone, not as a pair
+    trace = [Request(arrival_time=0.0, deadline=deadline),
+             Request(arrival_time=0.0)]
+    out = plan.server(max_batch=8, max_wait=1e9).replay(trace)
+    assert out[0].batch_size == 1 and out[0].deadline_met is True
+    # Control: without the deadline the same trace coalesces.
+    out2 = plan.server(max_batch=8, max_wait=1e9).replay(
+        [Request(arrival_time=0.0), Request(arrival_time=0.0)])
+    assert out2[0].batch_size == 2
+
+
+# ----------------------------------------------------------------------------
+# Adaptive batch controller
+# ----------------------------------------------------------------------------
+
+def _quad(b, a=0.09, c=0.01):
+    return a + c * b * b   # efficiency b/s(b) peaks at b = sqrt(a/c) = 3
+
+
+def test_controller_converges_to_efficiency_optimum():
+    ctl = AdaptiveBatchController(max_batch=8)
+    assert ctl.pick(8) == 8   # cold: optimistic full backlog
+    for _ in range(3):
+        for b in range(1, 9):
+            ctl.observe(b, _quad(b))
+    assert ctl.pick(8) == 3
+    assert ctl.pick(2) == 2   # backlog-capped
+    assert ctl.estimate(5) == pytest.approx(_quad(5), rel=1e-6)
+
+
+def test_controller_respects_deadline_slack():
+    ctl = AdaptiveBatchController(max_batch=8)
+    for b in range(1, 9):
+        ctl.observe(b, _quad(b))
+    # Only b in {1, 2} fit the slack; 2 is the more efficient of those.
+    assert ctl.pick(8, slack=_quad(2) + 1e-9) == 2
+    # Nothing fits: serve the fastest thing possible.
+    assert ctl.pick(8, slack=_quad(1) / 2) == 1
+
+
+def test_controller_seed_curve_rescales_onto_observations():
+    seed = {b: 2.0 * _quad(b) for b in (1, 2, 4, 8)}   # wrong scale, right shape
+    ctl = AdaptiveBatchController(max_batch=8, seed_curve=seed)
+    ctl.observe(4, _quad(4))
+    assert ctl.estimate(8) == pytest.approx(_quad(8), rel=0.05)
+    # Seed grid is {1,2,4,8}: interpolation at b=3 overestimates the
+    # convex curve slightly, so the pick lands on the optimum's grid
+    # neighbourhood rather than exactly sqrt(a/c)=3.
+    assert ctl.pick(8) in (3, 4)
+
+
+def test_load_bench_curve_reads_repo_benchmark():
+    curve = slo.load_bench_curve()
+    if curve:   # seeded repos carry BENCH_serving.json
+        assert all(isinstance(b, int) and s > 0 for b, s in curve.items())
+    assert slo.load_bench_curve("/nonexistent/BENCH.json") == {}
+
+
+def test_adaptive_server_integration(setup):
+    g, params, plan = setup
+    server = plan.server(max_batch=8, max_wait=1e9,
+                         adaptive_batch=AdaptiveBatchController(max_batch=8))
+    out = server.replay([Request(arrival_time=0.0) for _ in range(8)])
+    assert len(out) == 8
+    assert server.batch_controller._obs   # the loop closed
+    out2 = server.replay([Request(arrival_time=100.0) for _ in range(8)])
+    assert all(1 <= r.batch_size <= 8 for r in out2)
+    serial = plan.session().query()
+    assert all(np.array_equal(r.embeddings, serial.embeddings)
+               for r in out + out2)      # numerics untouched by batching
+
+
+# ----------------------------------------------------------------------------
+# Session override knobs (the ladder's mechanism)
+# ----------------------------------------------------------------------------
+
+def test_session_override_validation(setup):
+    g, params, plan = setup
+    with pytest.raises(ValueError, match="num_layers"):
+        Session(plan, num_layers=0)
+    with pytest.raises(ValueError, match="num_layers"):
+        Session(plan, num_layers=plan.model.num_layers + 1)
+    with pytest.raises(Exception):
+        Session(plan, compressor="definitely-not-a-codec")
+    # Full-depth / same-codec overrides are no-ops sharing the plan.
+    assert Session(plan, num_layers=plan.model.num_layers).plan is plan
+    assert Session(plan, compressor=plan.config.compressor).plan is plan
+
+
+def test_plan_with_overrides_shares_buffers(setup):
+    g, params, plan = setup
+    derived = plan.with_overrides(compressor="uniform8", num_layers=1)
+    assert derived.graph is plan.graph
+    assert derived.partitioned is plan.partitioned
+    assert derived.placement is plan.placement
+    assert derived.config.compressor == "uniform8"
+    assert derived.model.num_layers == 1
+    assert derived.cluster.k_layers == 1
+
+
+# ----------------------------------------------------------------------------
+# Trace annotations + summarize
+# ----------------------------------------------------------------------------
+
+def test_traces_carry_slo_annotations():
+    for fn in (traces.poisson, traces.constant, traces.bursty):
+        trace = fn(6, 4.0, deadline=0.5, priority=2)
+        assert all(r.deadline == 0.5 and r.priority == 2 for r in trace)
+    slo_fn = slo.slo_classes([(0.5, 2, 0.1), (0.5, 0, None)])
+    trace = traces.poisson(64, 4.0, seed=7, slo_fn=slo_fn)
+    assert {r.priority for r in trace} == {0, 2}
+    assert all((r.deadline == 0.1) == (r.priority == 2) for r in trace)
+
+
+def test_mixed_trace_annotates_updates(setup):
+    g, params, plan = setup
+    delta_fn = lambda i, rng: GraphDelta(
+        feature_ids=[0], feature_values=g.features[:1])
+    trace = traces.mixed(32, 4.0, delta_fn=delta_fn, update_fraction=0.4,
+                         seed=5, deadline=0.25, priority=1)
+    upds = [r for r in trace if isinstance(r, UpdateRequest)]
+    assert upds and all(u.deadline == 0.25 and u.priority == 1 for u in upds)
+
+
+def test_summarize_reports_slo_metrics(setup):
+    g, params, plan = setup
+    slo_fn = slo.slo_classes([(0.4, 2, 0.05), (0.6, 0, None)])
+    trace = traces.poisson(24, rate=60.0, seed=9, slo_fn=slo_fn)
+    out = plan.server(max_batch=4, slo=True).replay(trace)
+    summary = Server.summarize(out)
+    assert summary["requests"] + summary["rejected"] == 24
+    assert 0.0 <= summary["deadline_miss_rate"] <= 1.0
+    assert summary["goodput_rps"] <= summary["throughput_rps"] + 1e-9
+    assert (summary["latency_p50_s"] <= summary["latency_p95_s"]
+            <= summary["latency_p99_s"])
+    classes = summary["priority_classes"]
+    assert set(classes) <= {"0", "2"}
+    assert sum(c["requests"] for c in classes.values()) == summary["requests"]
+    assert sum(c["rejected"] for c in classes.values()) == summary["rejected"]
+
+
+def test_slo_classes_validation():
+    with pytest.raises(ValueError):
+        slo.slo_classes([])
+    with pytest.raises(ValueError):
+        slo.slo_classes([(0.0, 1, 0.1)])
+
+
+def test_server_rejects_bad_policy_type(setup):
+    g, params, plan = setup
+    with pytest.raises(TypeError, match="SLOPolicy"):
+        plan.server(slo="yes please")
