@@ -5,6 +5,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m compileall -q src
+# Lint stage: ruff (when available — config in pyproject.toml) plus the
+# static plan/kernel/cache verifier over every partitioner x compressor x
+# executor demo plan, so a broken invariant fails CI before any benchmark.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests
+else
+    echo "ci.sh: ruff not installed; skipping style lint" >&2
+fi
+PYTHONPATH=src python -m repro.analysis --demo --strict
 python -m pytest -x -q "$@"
 # Keep the throughput benchmark entry point from rotting: tiny sweep with a
 # built-in pass/fail guard (pipelined server must beat the serial loop).

@@ -1,0 +1,42 @@
+"""repro.analysis — static plan/kernel/cache verifier.
+
+Audits compiled :class:`~repro.api.plan.Plan` objects, the Pallas launch
+geometry they imply, and the process-wide program/operand caches *without
+executing anything*.  Four analyzer families (see ``docs/analysis.md`` for
+the invariant catalogue):
+
+  plan    partition coverage/disjointness, halo consistency, ELL padding,
+          capacity skew, post-update layout agreement
+  kernel  jax.eval_shape lint of block_spmm / dequant_spmm launches:
+          grid divisibility, prefetch-table bounds, wire dtype, VMEM/SMEM
+  cache   program/BlockCsr cache-key completeness + closure-pin detection
+  hlo     post-lowering roofline-term extraction (ex launch.hlo_analysis)
+
+Entry points::
+
+    from repro.analysis import run_checks, verify_plan
+    report = run_checks(plan)                  # plan+kernel+cache families
+    verify_plan(plan, mode="strict")           # what EngineConfig.validate
+                                               # plumbs into Engine.compile
+    python -m repro.analysis --demo --strict   # CI sweep over registry
+                                               # combination plans
+"""
+from repro.analysis.diagnostics import (AnalysisContext, CHECKS, Diagnostic,
+                                        PlanInvariantWarning,
+                                        PlanValidationError, Report,
+                                        SEVERITIES, VALIDATE_MODES,
+                                        checks_for, register_check,
+                                        run_checks, verify_plan)
+
+# Importing the check modules registers every check in CHECKS.
+from repro.analysis import cache_audit    # noqa: E402,F401
+from repro.analysis import hlo            # noqa: E402,F401
+from repro.analysis import kernel_lint    # noqa: E402,F401
+from repro.analysis import plan_checks    # noqa: E402,F401
+
+__all__ = [
+    "AnalysisContext", "CHECKS", "Diagnostic", "PlanInvariantWarning",
+    "PlanValidationError", "Report", "SEVERITIES", "VALIDATE_MODES",
+    "cache_audit", "checks_for", "hlo", "kernel_lint", "plan_checks",
+    "register_check", "run_checks", "verify_plan",
+]

@@ -1,0 +1,257 @@
+"""Cache-key and closure audit (the "cache" analyzer family).
+
+Two process-wide caches key compiled state by *some* of the serving knobs:
+``bsp._PROGRAM_CACHE`` (compiled shard_map programs) and
+``ops._BLOCK_CSR_CACHE`` (prepared whole-graph block-CSR operands).  A knob
+that affects lowering but is missing from the key serves a stale program; a
+closure that captures a retired graph's buffers pins its memory until LRU
+eviction (the leak class the batched-execution PR fixed by hand).  These
+checks audit both failure modes statically:
+
+  * **knob coverage** — every ``EngineConfig`` field must be classified in
+    :data:`KNOB_COVERAGE`: either it reaches the program key (directly or
+    via a derived field like ``use_kernels``), or it is explicitly declared
+    key-irrelevant (pricing/planning/diagnostics).  Adding a knob without
+    classifying it is an error — the author must decide.
+  * **key arity/shape** — every live cache key must have exactly the
+    registered fields (``bsp.PROGRAM_KEY_FIELDS`` /
+    ``ops.BLOCK_CSR_KEY_FIELDS``) with the expected types.
+  * **closure pins** — walk every cached program's closure chain; any cell
+    holding a large ndarray or a Graph/PartitionedGraph/BlockShardCsr/
+    BlockCsr is a retired-buffer pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Tuple
+
+import numpy as np
+
+from repro.analysis.diagnostics import (AnalysisContext, Diagnostic, error,
+                                        info, register_check)
+from repro.api.plan import EngineConfig
+
+#: How each EngineConfig knob relates to the compiled-program cache key.
+#: ``via`` names the _program_key fields that carry the knob's effect;
+#: an empty ``via`` with kind "key-irrelevant:*" declares the knob cannot
+#: change lowering.  check_program_key_fields errors on any EngineConfig
+#: field missing here: new knobs must be classified deliberately.
+KNOB_COVERAGE = {
+    # Change the partition layout -> captured by the key's geometry tuple.
+    "partitioner": {"kind": "geometry", "via": ("geometry",)},
+    "placement": {"kind": "geometry", "via": ("geometry",)},
+    # DAQ compressors flip the fused-dequant halo wire.
+    "compressor": {"kind": "lowering", "via": ("halo_quant",)},
+    "exchange": {"kind": "lowering", "via": ("exchange",)},
+    # Selects WHICH runtime entry point runs (tag/mesh), not how one
+    # program lowers; the mesh program key carries tag + mesh_key.
+    "executor": {"kind": "dispatch", "via": ("tag", "mesh_key")},
+    # Resolves to the use_kernels flag baked into the program.
+    "aggregation": {"kind": "lowering", "via": ("use_kernels",)},
+    # Pricing/planning inputs: consumed before any program is traced.
+    "network": {"kind": "key-irrelevant:pricing", "via": ()},
+    "cluster_spec": {"kind": "key-irrelevant:pricing", "via": ()},
+    "hidden": {"kind": "key-irrelevant:pricing", "via": ()},
+    "seed": {"kind": "key-irrelevant:pricing", "via": ()},
+    "sync_cost": {"kind": "key-irrelevant:pricing", "via": ()},
+    "bytes_per_vertex": {"kind": "key-irrelevant:pricing", "via": ()},
+    "update_max_imbalance": {"kind": "key-irrelevant:planning", "via": ()},
+    "update_max_cut_growth": {"kind": "key-irrelevant:planning", "via": ()},
+    # Diagnostics only: validation never changes what is compiled.
+    "validate": {"kind": "key-irrelevant:diagnostics", "via": ()},
+}
+
+#: expected python type(s) of each _program_key field, by position.
+_PROGRAM_KEY_TYPES = {
+    "tag": str, "kind": str, "axis": str, "exchange": str,
+    "use_kernels": bool, "halo_quant": bool, "interpret": bool,
+    "geometry": tuple, "mesh_key": tuple,
+}
+
+#: ndarray cells above this many elements count as pinned buffers.
+_PIN_ELEMENT_THRESHOLD = 1024
+
+
+@register_check(
+    "cache.program.key_fields", family="cache", layer="cache",
+    requires=(),
+    description="every lowering-relevant knob reaches the compiled-program "
+                "cache key; live keys carry all registered fields")
+def check_program_key_fields(ctx: AnalysisContext) -> Iterable[Diagnostic]:
+    from repro.runtime import bsp
+    out = []
+    cid = "cache.program.key_fields"
+    fields = {f.name for f in dataclasses.fields(EngineConfig)}
+    covered = set(KNOB_COVERAGE)
+    for missing in sorted(fields - covered):
+        out.append(error(
+            cid, f"EngineConfig.{missing} is not classified in "
+                 f"cache_audit.KNOB_COVERAGE — if it affects lowering it "
+                 f"MUST join bsp._program_key, else declare it "
+                 f"key-irrelevant", layer="cache",
+            subject=f"EngineConfig.{missing}",
+            fix_hint="add the field to KNOB_COVERAGE with its key mapping "
+                     "(and to _program_key if it changes lowering)"))
+    for stale in sorted(covered - fields):
+        out.append(error(
+            cid, f"KNOB_COVERAGE classifies {stale!r} which is no longer "
+                 f"an EngineConfig field", layer="cache",
+            subject=f"KNOB_COVERAGE[{stale!r}]",
+            fix_hint="drop the stale classification"))
+    key_fields = bsp.PROGRAM_KEY_FIELDS
+    for knob, spec in KNOB_COVERAGE.items():
+        for via in spec["via"]:
+            if via not in key_fields:
+                out.append(error(
+                    cid, f"knob {knob!r} claims to reach the program key "
+                         f"via {via!r}, but PROGRAM_KEY_FIELDS has no such "
+                         f"field", layer="cache", subject=f"via[{via!r}]",
+                    fix_hint="KNOB_COVERAGE and bsp.PROGRAM_KEY_FIELDS "
+                             "drifted apart"))
+    cache = ctx.resolved_program_cache()
+    for key in cache:
+        if not isinstance(key, tuple) or len(key) != len(key_fields):
+            got = len(key) if isinstance(key, tuple) else type(key).__name__
+            out.append(error(
+                cid, f"cached-program key {key!r} has {got} fields, "
+                     f"registered key has {len(key_fields)} "
+                     f"({', '.join(key_fields)}) — a knob was stripped "
+                     f"from the key and distinct programs now collide",
+                layer="cache", subject="_PROGRAM_CACHE",
+                fix_hint="key every program with bsp._program_key"))
+            continue
+        for name, value in zip(key_fields, key):
+            want = _PROGRAM_KEY_TYPES[name]
+            if not isinstance(value, want):
+                out.append(error(
+                    cid, f"cached-program key field {name!r} is "
+                         f"{type(value).__name__}, expected {want.__name__}"
+                         f" (key {key!r})", layer="cache",
+                    subject=f"key.{name}",
+                    fix_hint="key every program with bsp._program_key"))
+    if not out:
+        out.append(info(cid, f"{len(cache)} cached programs keyed on "
+                             f"{len(key_fields)} fields; all "
+                             f"{len(fields)} knobs classified",
+                        layer="cache", subject="_PROGRAM_CACHE"))
+    return out
+
+
+@register_check(
+    "cache.blockcsr.key_fields", family="cache", layer="cache",
+    requires=(),
+    description="BlockCsr cache keys carry fingerprint + normalize + block")
+def check_blockcsr_key_fields(ctx: AnalysisContext) -> Iterable[Diagnostic]:
+    from repro.kernels import ops
+    out = []
+    cid = "cache.blockcsr.key_fields"
+    key_fields = ops.BLOCK_CSR_KEY_FIELDS
+    cache = ctx.resolved_block_csr_cache()
+    for key in cache:
+        if not isinstance(key, tuple) or len(key) != len(key_fields):
+            got = len(key) if isinstance(key, tuple) else type(key).__name__
+            out.append(error(
+                cid, f"BlockCsr cache key {key!r} has {got} fields, "
+                     f"registered key has {len(key_fields)} "
+                     f"({', '.join(key_fields)}) — operands for different "
+                     f"adjacencies/normalizations would collide",
+                layer="cache", subject="_BLOCK_CSR_CACHE",
+                fix_hint="key entries as (graph_fingerprint(g), normalize, "
+                         "block)"))
+            continue
+        fp, normalize, block = key
+        if not (isinstance(fp, str) and len(fp) == 32):
+            out.append(error(
+                cid, f"BlockCsr key fingerprint {fp!r} is not a 32-hex "
+                     f"adjacency digest — content keying is broken and a "
+                     f"mutated graph can alias a stale operand",
+                layer="cache", subject="key.fingerprint",
+                fix_hint="use ops.graph_fingerprint(g)"))
+        if normalize not in (None, "mean"):
+            out.append(error(
+                cid, f"BlockCsr key normalize={normalize!r} is not a known "
+                     f"normalization", layer="cache",
+                subject="key.normalize", fix_hint="use None or 'mean'"))
+        if not isinstance(block, int) or block <= 0:
+            out.append(error(
+                cid, f"BlockCsr key block={block!r} is not a positive "
+                     f"tile edge", layer="cache", subject="key.block",
+                fix_hint="use the BLOCK tile size"))
+    if not out:
+        out.append(info(cid, f"{len(cache)} cached BlockCsr operands, keys "
+                             f"well-formed", layer="cache",
+                        subject="_BLOCK_CSR_CACHE"))
+    return out
+
+
+def _closure_cells(fn, depth: int = 0, seen=None) -> List[Tuple[str, object]]:
+    """(path, value) for every closure cell reachable from ``fn`` through
+    __wrapped__ chains and nested function cells (bounded depth)."""
+    if seen is None:
+        seen = set()
+    if depth > 6 or id(fn) in seen:
+        return []
+    seen.add(id(fn))
+    out: List[Tuple[str, object]] = []
+    wrapped = getattr(fn, "__wrapped__", None)
+    if wrapped is not None:
+        out.extend(_closure_cells(wrapped, depth + 1, seen))
+    closure = getattr(fn, "__closure__", None)
+    names = getattr(getattr(fn, "__code__", None), "co_freevars", ())
+    if closure:
+        for name, cell in zip(names, closure):
+            try:
+                value = cell.cell_contents
+            except ValueError:     # empty cell
+                continue
+            path = f"{getattr(fn, '__name__', '<fn>')}.{name}"
+            out.append((path, value))
+            if callable(value):
+                out.extend(_closure_cells(value, depth + 1, seen))
+    return out
+
+
+def _pin_description(value) -> str:
+    """Non-empty description when ``value`` pins retired graph state."""
+    type_names = ("Graph", "PartitionedGraph", "BlockShardCsr", "BlockCsr")
+    if type(value).__name__ in type_names:
+        return f"a {type(value).__name__} instance"
+    size = getattr(value, "size", None)
+    if (size is not None and getattr(value, "dtype", None) is not None
+            and size > _PIN_ELEMENT_THRESHOLD):
+        return (f"a {getattr(value, 'shape', '?')} {value.dtype} buffer "
+                f"({int(size)} elements)")
+    return ""
+
+
+@register_check(
+    "cache.program.closure_pins", family="cache", layer="cache",
+    requires=(),
+    description="no cached program's closure pins retired graph buffers")
+def check_closure_pins(ctx: AnalysisContext) -> Iterable[Diagnostic]:
+    out = []
+    cid = "cache.program.closure_pins"
+    cache = ctx.resolved_program_cache()
+    for key, fn in cache.items():
+        for path, value in _closure_cells(fn):
+            desc = _pin_description(value)
+            if desc:
+                out.append(error(
+                    cid, f"cached program {key!r} closes over {desc} at "
+                         f"{path} — the buffer stays pinned for the "
+                         f"cache's whole LRU lifetime even after the graph "
+                         f"retires", layer="cache", subject=path,
+                    fix_hint="bind layout statics to locals before "
+                             "defining shard_fn; pass every buffer as a "
+                             "traced operand (see bsp.bsp_apply)"))
+    if not out:
+        out.append(info(cid, f"{len(cache)} cached programs hold only "
+                             f"scalar/static closures", layer="cache",
+                        subject="_PROGRAM_CACHE"))
+    return out
+
+
+def _audit_numpy_guard(x) -> bool:
+    """True when ``x`` is an ndarray-like with real storage (helper for
+    tests constructing synthetic pins)."""
+    return isinstance(x, np.ndarray) and x.size > _PIN_ELEMENT_THRESHOLD

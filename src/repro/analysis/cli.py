@@ -1,0 +1,172 @@
+"""Command line front end: ``python -m repro.analysis``.
+
+Modes:
+
+  * ``python -m repro.analysis plan.pkl`` — verify a pickled Plan.
+  * ``python -m repro.analysis --demo`` — compile a demo plan for every
+    partitioner x compressor x executor registry combination and verify
+    each (plus one structural ``apply_delta`` scenario and one lowered-HLO
+    module); this is the CI smoke sweep behind ``scripts/ci.sh``.
+  * ``python -m repro.analysis --list`` — print the check catalogue.
+
+``--strict`` also fails (exit 1) on warnings; default fails on errors
+only.  ``--families plan,cache`` restricts the run.
+"""
+from __future__ import annotations
+
+import argparse
+import pickle
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis.diagnostics import (AnalysisContext, CHECKS, Report,
+                                        checks_for, run_checks)
+
+#: demo graph scale: ~180 vertices — big enough for multi-shard layouts,
+#: small enough that the full registry sweep stays in CI budget.
+DEMO_SCALE = 0.03
+
+
+def _demo_plans():
+    """(label, plan) for every partitioner x compressor x executor combo."""
+    import jax
+
+    from repro.api.engine import Engine
+    from repro.api.registry import COMPRESSORS, EXECUTORS, PARTITIONERS
+    from repro.gnn import datasets, models
+
+    g = datasets.load("siot", scale=DEMO_SCALE, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    for partitioner in PARTITIONERS.keys():
+        for compressor in COMPRESSORS.keys():
+            for executor in EXECUTORS.keys():
+                label = f"{partitioner}+{compressor}+{executor}"
+                engine = Engine((params, "gcn"), "1A+3B",
+                                partitioner=partitioner,
+                                compressor=compressor,
+                                executor=executor, exchange="halo",
+                                aggregation="auto")
+                yield label, engine, engine.compile(g)
+
+
+def _demo_update_plan():
+    """One structural apply_delta (the PR-4 ``n=`` repair path)."""
+    import jax
+
+    from repro.api.engine import Engine
+    from repro.api.updates import GraphDelta
+    from repro.gnn import datasets, models
+
+    g = datasets.load("siot", scale=DEMO_SCALE, seed=1)
+    params = models.gnn_init(jax.random.PRNGKey(1), "gcn",
+                             [g.feature_dim, 16, 8])
+    engine = Engine((params, "gcn"), "1A+3B", executor="mesh-bsp",
+                    aggregation="pallas")
+    plan = engine.compile(g)
+    import numpy as np
+    v = g.num_vertices
+    delta = GraphDelta(
+        add_features=np.ones((2, g.feature_dim), np.float32),
+        add_edges=[(v, 0), (v + 1, 1)],
+        remove_edges=[(int(g.senders[0]), int(g.receivers[0]))])
+    return engine, engine.apply_delta(plan, delta, force="incremental")
+
+
+def _demo_hlo() -> str:
+    """Lowered HLO text of a small jitted layer stack."""
+    import jax
+    import jax.numpy as jnp
+
+    def stack(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=3)
+        return h
+
+    x = jnp.zeros((8, 16), jnp.float32)
+    w = jnp.zeros((16, 16), jnp.float32)
+    return jax.jit(stack).lower(x, w).compile().as_text()
+
+
+def _families(arg: Optional[str]) -> Optional[Sequence[str]]:
+    return None if not arg else tuple(s.strip() for s in arg.split(",")
+                                      if s.strip())
+
+
+def _print_catalogue() -> None:
+    for fn in checks_for(None):
+        print(f"{fn.check_id:32s} [{fn.family}/{fn.layer}] "
+              f"{fn.description}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static plan/kernel/cache verifier (docs/analysis.md)")
+    p.add_argument("plan", nargs="?", help="pickled Plan to verify")
+    p.add_argument("--demo", action="store_true",
+                   help="verify plans for every partitioner x compressor "
+                        "x executor registry combination")
+    p.add_argument("--strict", action="store_true",
+                   help="exit nonzero on warnings too")
+    p.add_argument("--families",
+                   help="comma-separated analyzer families to run "
+                        "(plan,kernel,cache,hlo; default all applicable)")
+    p.add_argument("--list", action="store_true", dest="list_checks",
+                   help="print the check catalogue and exit")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also print info-level diagnostics")
+    args = p.parse_args(argv)
+
+    if args.list_checks:
+        _print_catalogue()
+        return 0
+    if not args.demo and not args.plan:
+        p.error("give a pickled plan path or --demo")
+
+    families = _families(args.families)
+    total = Report()
+    failed = False
+
+    def run(label: str, ctx: AnalysisContext, fams) -> None:
+        nonlocal failed
+        report = run_checks(ctx, families=fams)
+        total.extend(report)
+        bad = report.errors + (report.warnings if args.strict else [])
+        status = "FAIL" if bad else "ok"
+        if bad:
+            failed = True
+        print(f"[{status:4s}] {label}: {len(report.ran)} checks, "
+              f"{len(report.errors)} errors, {len(report.warnings)} "
+              f"warnings")
+        for d in report.diagnostics:
+            if d.severity != "info" or args.verbose:
+                print("    " + d.format().replace("\n", "\n    "))
+
+    if args.plan:
+        with open(args.plan, "rb") as fh:
+            plan = pickle.load(fh)
+        run(args.plan, AnalysisContext(plan=plan),
+            families or ("plan", "kernel", "cache"))
+    if args.demo:
+        for label, _engine, plan in _demo_plans():
+            run(label, AnalysisContext(plan=plan),
+                families or ("plan", "kernel", "cache"))
+        if families is None or "plan" in families:
+            _engine, updated = _demo_update_plan()
+            run("apply_delta[structural]", AnalysisContext(plan=updated),
+                families or ("plan", "kernel", "cache"))
+        if families is None or "hlo" in families:
+            run("hlo[scan-stack]", AnalysisContext(hlo=_demo_hlo()),
+                ("hlo",))
+
+    n_checks = len(list(CHECKS))
+    print(f"{n_checks} registered checks; {len(total.ran)} runs, "
+          f"{len(total.errors)} errors, {len(total.warnings)} warnings"
+          + (" — FAIL" if failed else " — OK"))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,11 @@ class Engine:
         thresholds for ``apply_delta`` — when the incrementally repaired
         partitioning exceeds either, the delta triggers a full recompile
         instead (overridable per call).
+      validate: static plan verification mode — "off" (default), "warn"
+        (emit ``PlanInvariantWarning`` per finding) or "strict" (raise
+        ``repro.analysis.PlanValidationError``). Runs the
+        ``repro.analysis`` plan invariant checks at ``compile`` /
+        ``apply_delta`` exit; see ``docs/analysis.md``.
     """
 
     def __init__(self, model, cluster: Union[str, "simulation.FogCluster"]
@@ -69,7 +74,8 @@ class Engine:
                  bytes_per_vertex: Optional[float] = None,
                  aggregation: str = "auto",
                  update_max_imbalance: float = 2.0,
-                 update_max_cut_growth: float = 1.5):
+                 update_max_cut_growth: float = 1.5,
+                 validate: str = "off"):
         self.model: ModelSpec = as_model(model)
         self.cluster = cluster
         # Resolve every stage eagerly so bad keys fail at construction.
@@ -87,6 +93,9 @@ class Engine:
             exchange=exchange if getattr(self._executor,
                                          "needs_block_shards", False)
             else None)
+        if validate not in ("off", "warn", "strict"):
+            raise ValueError(f"unknown validate mode {validate!r}; "
+                             f"available: off, warn, strict")
         self.config = EngineConfig(
             partitioner=PARTITIONERS.canonical(partitioner),
             placement=PLACEMENTS.canonical(placement),
@@ -99,7 +108,15 @@ class Engine:
             hidden=hidden, seed=seed, sync_cost=sync_cost,
             bytes_per_vertex=bytes_per_vertex, aggregation=aggregation,
             update_max_imbalance=update_max_imbalance,
-            update_max_cut_growth=update_max_cut_growth)
+            update_max_cut_growth=update_max_cut_growth,
+            validate=validate)
+
+    def _validated(self, plan: Plan) -> Plan:
+        """Run the static plan invariant checks per ``config.validate``."""
+        if self.config.validate != "off":
+            from repro.analysis import verify_plan
+            verify_plan(plan, mode=self.config.validate)
+        return plan
 
     def compile(self, graph: Graph) -> Plan:
         """Setup phase (paper steps 1-2): profile, register, plan, freeze."""
@@ -129,9 +146,10 @@ class Engine:
         partitioned = bsp.build_partitioned(
             graph, placement.assignment,
             build_blocks=needs_shards and mode == "pallas")
-        return Plan(model=self.model, graph=graph, cluster=cluster,
-                    fogs=fogs, placement=placement, partitioned=partitioned,
-                    config=cfg)
+        return self._validated(
+            Plan(model=self.model, graph=graph, cluster=cluster,
+                 fogs=fogs, placement=placement, partitioned=partitioned,
+                 config=cfg))
 
     @classmethod
     def from_plan(cls, plan: Plan) -> "Engine":
@@ -154,7 +172,8 @@ class Engine:
                    bytes_per_vertex=cfg.bytes_per_vertex,
                    aggregation=cfg.aggregation,
                    update_max_imbalance=cfg.update_max_imbalance,
-                   update_max_cut_growth=cfg.update_max_cut_growth)
+                   update_max_cut_growth=cfg.update_max_cut_growth,
+                   validate=cfg.validate)
 
     # -- dynamic-graph updates ----------------------------------------------
 
@@ -230,8 +249,9 @@ class Engine:
                 and np.array_equal(base, plan.placement.assignment)
                 and force != "recompile"):
             report = UpdateReport(mode="noop", **report_kw)
-            return dataclasses.replace(plan, provenance="incremental",
-                                       update_report=report)
+            return self._validated(
+                dataclasses.replace(plan, provenance="incremental",
+                                    update_report=report))
 
         recompile_reason = ""
         if force != "incremental" and dp.structural:
@@ -309,10 +329,11 @@ class Engine:
         report = UpdateReport(
             mode="features" if not dp.structural else "incremental",
             dirty_local=dirty_l, dirty_halo=dirty_h, **report_kw)
-        return Plan(model=self.model, graph=dp.graph, cluster=cluster,
-                    fogs=plan.fogs, placement=placement,
-                    partitioned=partitioned, config=cfg,
-                    provenance="incremental", update_report=report)
+        return self._validated(
+            Plan(model=self.model, graph=dp.graph, cluster=cluster,
+                 fogs=plan.fogs, placement=placement,
+                 partitioned=partitioned, config=cfg,
+                 provenance="incremental", update_report=report))
 
     def __repr__(self) -> str:
         c = self.config

@@ -76,6 +76,11 @@ class EngineConfig:
     # update_max_cut_growth x the pre-update cut fraction.
     update_max_imbalance: float = 2.0
     update_max_cut_growth: float = 1.5
+    # Static plan verification (repro.analysis): "off" | "warn" | "strict".
+    # strict runs the plan invariant checks at Engine.compile / apply_delta
+    # exit and raises PlanValidationError on any violation; warn emits
+    # PlanInvariantWarning instead. Never changes what is compiled.
+    validate: str = "off"
 
     def with_overrides(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

@@ -119,6 +119,10 @@ class BlockCsr:
 _BLOCK_CSR_CACHE: "OrderedDict[tuple, BlockCsr]" = OrderedDict()
 _BLOCK_CSR_CACHE_MAX = 16
 
+#: Field names of the _BLOCK_CSR_CACHE key tuple, in order; audited by
+#: repro.analysis.cache_audit against the live cache.
+BLOCK_CSR_KEY_FIELDS = ("adjacency_fingerprint", "normalize", "block")
+
 
 def graph_fingerprint(g: Graph) -> str:
     """Content hash of a graph's *adjacency* (features excluded).

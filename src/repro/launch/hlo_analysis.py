@@ -1,330 +1,18 @@
-"""Post-optimization HLO analyzer for the roofline terms.
-
-``compiled.cost_analysis()`` counts every while-loop body ONCE, but our
-layer stacks (lax.scan), microbatch accumulation, and attention q-chunk
-loops are all while loops — so its FLOPs/bytes understate real work by the
-trip counts. This module re-derives the terms from ``compiled.as_text()``:
-
-  * builds a symbol table (op name -> shape) per module,
-  * builds the computation call graph (fusion `calls=`, while `body=` /
-    `condition=`, `to_apply=`) with while trip counts taken from
-    ``backend_config={"known_trip_count":{"n":...}}``,
-  * multiplies each computation's cost by the product of trip counts along
-    its call chain,
-  * FLOPs: 2 * result_elements * contracted_size for every `dot`
-    (+ convolution via window accounting),
-  * bytes: operand + result bytes of every *fusion-boundary* op (fusions,
-    dots, copies, slices, collectives, ...) — register-level ops inside
-    fused computations are free,
-  * collectives: result bytes of all-gather / all-reduce / reduce-scatter /
-    all-to-all / collective-permute (per-device shapes post-SPMD).
-
-All sums are per-device (post-SPMD shapes are per-partition).
-"""
-from __future__ import annotations
-
-import dataclasses
-import re
-from typing import Dict, List, Optional, Tuple
-
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
-                "f8e5m2": 1, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
-                "c64": 8, "c128": 16, "token": 0}
-
-_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
-                       r"s16|u16|s8|u8|pred|c64|c128|token)\[([0-9,]*)\]")
-
-_OP_RE = re.compile(
-    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
-    r"((?:\([^)]*\))|(?:[\w\[\]{},:\s/*]*?))\s*"
-    r"([a-z][a-z0-9\-]*)\((.*)$")
-
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-# Ops whose operands/results are materialized buffers (fusion boundaries).
-_BOUNDARY_OPS = {
-    "fusion", "dot", "convolution", "copy", "copy-start", "dynamic-slice",
-    "dynamic-update-slice", "gather", "scatter", "reduce", "broadcast",
-    "transpose", "reshape", "concatenate", "slice", "pad", "select",
-    "iota", "rng", "sort", "select-and-scatter", "reduce-window", "map",
-    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute", "all-gather-start", "all-reduce-start",
-    "collective-permute-start",
-}
-
-_SKIP_OPS = {"get-tuple-element", "tuple", "parameter", "constant",
-             "bitcast", "while", "conditional", "call", "after-all",
-             "partition-id", "replica-id", "custom-call",
-             "get-dimension-size", "domain", "all-gather-done",
-             "all-reduce-done", "copy-done", "collective-permute-done"}
-
-
-def _shape_elems_bytes(text: str) -> Tuple[int, int]:
-    """(elements, bytes) summed over every shape literal in ``text``."""
-    elems = 0
-    nbytes = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        elems += n
-        nbytes += n * _DTYPE_BYTES[dt]
-    return elems, nbytes
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    shape_text: str
-    opcode: str
-    rest: str       # operands + attributes tail of the line
-
-
-@dataclasses.dataclass
-class Computation:
-    name: str
-    ops: List[Op] = dataclasses.field(default_factory=list)
-
-
-def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Dict[str, str],
-                                    str]:
-    """-> (computations, symbol table name->shape_text, entry name)."""
-    comps: Dict[str, Computation] = {}
-    shapes: Dict[str, str] = {}
-    entry = ""
-    cur: Optional[Computation] = None
-    for line in hlo.splitlines():
-        if line and not line[0].isspace():
-            m = _COMP_RE.match(line)
-            if m:
-                cur = Computation(m.group(1))
-                comps[cur.name] = cur
-                if line.startswith("ENTRY"):
-                    entry = cur.name
-            continue
-        m = _OP_RE.match(line)
-        if not m or cur is None:
-            continue
-        name, shape_text, opcode, rest = m.groups()
-        cur.ops.append(Op(name, shape_text, opcode, rest))
-        shapes[name] = shape_text
-    return comps, shapes, entry
-
-
-def _call_edges(op: Op) -> List[Tuple[str, bool]]:
-    """[(callee, is_loop_body)] for one op."""
-    out = []
-    for key in ("calls", "to_apply", "body", "condition", "true_computation",
-                "false_computation"):
-        for m in re.finditer(rf"{key}=%?([\w.\-]+)", op.rest):
-            out.append((m.group(1), key in ("body", "condition")))
-    return out
-
-
-def _trip_count(op: Op) -> int:
-    m = re.search(r'known_trip_count[":{\s]*["n:\s]*"?(\d+)', op.rest)
-    return int(m.group(1)) if m else 1
-
-
-def computation_multipliers(comps: Dict[str, Computation],
-                            entry: str) -> Dict[str, float]:
-    """Execution count of each computation (product of trips on call chain).
-
-    Iterative propagation from the entry (the call graph is a DAG)."""
-    mult: Dict[str, float] = {name: 0.0 for name in comps}
-    if entry not in comps:
-        return {name: 1.0 for name in comps}
-    mult[entry] = 1.0
-    # Topo-ish: repeat until fixpoint (graph is small).
-    for _ in range(len(comps) + 2):
-        changed = False
-        acc: Dict[str, float] = {name: 0.0 for name in comps}
-        acc[entry] = 1.0
-        for cname, comp in comps.items():
-            if mult.get(cname, 0.0) <= 0:
-                continue
-            for op in comp.ops:
-                edges = _call_edges(op)
-                if not edges:
-                    continue
-                trips = _trip_count(op) if op.opcode == "while" else 1
-                for callee, is_loop in edges:
-                    if callee in acc:
-                        acc[callee] += mult[cname] * (trips if is_loop else 1)
-        for name in comps:
-            if name != entry and abs(acc[name] - mult[name]) > 1e-9:
-                mult[name] = acc[name]
-                changed = True
-        if not changed:
-            break
-    return {k: max(v, 0.0) for k, v in mult.items()}
-
-
-def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
-    result_elems, _ = _shape_elems_bytes(op.shape_text)
-    # lhs operand: first %name inside parens. Operands may be printed bare
-    # ("dot(%a, %b)") or typed ("dot(f32[32,64]{1,0} %a, ...)"), so search
-    # for the first reference rather than anchoring at the paren.
-    mo = re.search(r"%([\w.\-]+)", op.rest)
-    if not mo:
-        return 0.0
-    lhs_shape = shapes.get(mo.group(1), "")
-    mdim = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
-    if not mdim or not lhs_shape:
-        return 2.0 * result_elems  # degenerate
-    sm = _SHAPE_RE.search(lhs_shape)
-    if not sm:
-        return 2.0 * result_elems
-    dims = [int(d) for d in sm.group(2).split(",") if d]
-    contracted = 1
-    for ax in mdim.group(1).split(","):
-        if ax:
-            ax = int(ax)
-            if ax < len(dims):
-                contracted *= dims[ax]
-    return 2.0 * result_elems * contracted
-
-
-def _operand_bytes(op: Op, shapes: Dict[str, str]) -> int:
-    total = 0
-    # operands = %names before any ", attr=" — just scan all %refs in the
-    # call parens segment (attrs reference computations with %, filter by
-    # presence in symbol table).
-    paren = op.rest.split("),")[0]
-    for m in re.finditer(r"%([\w.\-]+)", paren):
-        st = shapes.get(m.group(1))
-        if st:
-            total += _shape_elems_bytes(st)[1]
-    return total
-
-
-@dataclasses.dataclass
-class HloCost:
-    flops: float = 0.0
-    bytes_accessed: float = 0.0
-    collective_bytes: Dict[str, float] = dataclasses.field(
-        default_factory=dict)
-    dot_count: int = 0
-    unscaled_flops: float = 0.0
-
-    @property
-    def total_collective(self) -> float:
-        return sum(self.collective_bytes.values())
-
-
-def analyze(hlo: str) -> HloCost:
-    comps, shapes, entry = parse_module(hlo)
-    mult = computation_multipliers(comps, entry)
-    # Computations reached only through fusion `calls=` are register-level:
-    # find the set of fused computations.
-    fused = set()
-    for comp in comps.values():
-        for op in comp.ops:
-            if op.opcode == "fusion":
-                for callee, _ in _call_edges(op):
-                    fused.add(callee)
-            elif op.opcode in ("reduce", "scatter", "sort", "map",
-                               "reduce-window", "select-and-scatter",
-                               "all-reduce", "reduce-scatter",
-                               "all-reduce-start"):
-                for callee, _ in _call_edges(op):
-                    fused.add(callee)  # tiny apply fns
-    cost = HloCost(collective_bytes={c: 0.0 for c in COLLECTIVES})
-    for cname, comp in comps.items():
-        m = mult.get(cname, 1.0)
-        if m <= 0:
-            continue
-        in_fused = cname in fused
-        for op in comp.ops:
-            oc = op.opcode
-            if oc == "dot":
-                f = _dot_flops(op, shapes)
-                cost.flops += m * f
-                cost.unscaled_flops += f
-                cost.dot_count += 1
-            elif oc == "convolution":
-                # window flops ~ 2 * result * (kernel spatial * in_ch/feat)
-                result_elems, _ = _shape_elems_bytes(op.shape_text)
-                cost.flops += m * 2.0 * result_elems  # lower bound
-            base = oc.replace("-start", "")
-            if base in COLLECTIVES:
-                _, b = _shape_elems_bytes(op.shape_text)
-                # XLA:CPU promotes bf16 all-reduce accumulation to f32
-                # (`to_apply=%add..._promoted`); TPU reduces natively in
-                # bf16, so count the wire payload at half width.
-                if "_promoted" in op.rest:
-                    b //= 2
-                cost.collective_bytes[base] += m * b
-            if not in_fused and oc in _BOUNDARY_OPS:
-                cost.bytes_accessed += _op_bytes_scaled(op, shapes, m)
-    return cost
-
-
-def _op_bytes_scaled(op: Op, shapes: Dict[str, str], m: float) -> float:
-    """Traffic of one op executed ``m`` times.
-
-    Operands much larger than the result inside a loop are slice-accessed
-    stacked buffers (scan-stacked layer weights, chunked activations): the
-    loop touches each element ~once over all iterations, so they count
-    once, not x m.
-    """
-    _, rb = _shape_elems_bytes(op.shape_text)
-    name = op.name
-    if "dynamic-update-slice" in name or op.opcode == "dynamic-update-slice":
-        small = 0
-        paren = op.rest.split("),")[0]
-        for mm in re.finditer(r"%([\w.\-]+)", paren):
-            st = shapes.get(mm.group(1))
-            if st:
-                b = _shape_elems_bytes(st)[1]
-                if b < rb:
-                    small += b
-        return m * 2.0 * small
-    if "dynamic-slice" in name or op.opcode in ("dynamic-slice", "slice",
-                                                "gather"):
-        return m * 2.0 * rb  # read slice + write result
-    total = m * rb
-    paren = op.rest.split("),")[0]
-    for mm in re.finditer(r"%([\w.\-]+)", paren):
-        st = shapes.get(mm.group(1))
-        if not st:
-            continue
-        b = _shape_elems_bytes(st)[1]
-        if m > 1 and b > 8 * max(rb, 1):
-            total += b          # stacked buffer: read once across the loop
-        else:
-            total += m * b
-    return total
-
-
-def _op_bytes(op: Op, shapes: Dict[str, str]) -> float:
-    """Materialized traffic of one fusion-boundary op.
-
-    Dynamic-slice reads only the slice; dynamic-update-slice writes only the
-    update (the big buffer is aliased in place). XLA embeds the root opcode
-    in fusion names, so `..._dynamic-update-slice_fusion` is handled the
-    same way — without this, loop-carried buffers accessed via slices get
-    counted in full every iteration (~100x overcount).
-    """
-    _, rb = _shape_elems_bytes(op.shape_text)
-    name = op.name
-    if "dynamic-update-slice" in name or op.opcode == "dynamic-update-slice":
-        # count small operands (the update + indices) twice (read+write)
-        small = 0
-        paren = op.rest.split("),")[0]
-        for mm in re.finditer(r"%([\w.\-]+)", paren):
-            st = shapes.get(mm.group(1))
-            if st:
-                b = _shape_elems_bytes(st)[1]
-                if b < rb:
-                    small += b
-        return 2.0 * small
-    if "dynamic-slice" in name or op.opcode in ("dynamic-slice", "slice",
-                                                "gather"):
-        return 2.0 * rb  # read slice + write result
-    return rb + _operand_bytes(op, shapes)
+"""Back-compat shim: the HLO analyzer moved to :mod:`repro.analysis.hlo`
+so all static tooling lives under one roof.  Import from there."""
+from repro.analysis.hlo import (  # noqa: F401
+    COLLECTIVES,
+    Computation,
+    HloCost,
+    Op,
+    _call_edges,
+    _dot_flops,
+    _op_bytes,
+    _op_bytes_scaled,
+    _operand_bytes,
+    _shape_elems_bytes,
+    _trip_count,
+    analyze,
+    computation_multipliers,
+    parse_module,
+)

@@ -465,6 +465,14 @@ def _cached_program(key: tuple, build):
     return fn
 
 
+#: Field names of the _program_key tuple, in order. The cache audit
+#: (repro.analysis.cache_audit) checks every live key against this and
+#: maps each EngineConfig knob onto the field that carries it — keep the
+#: three in sync when adding a knob that changes lowering.
+PROGRAM_KEY_FIELDS = ("tag", "kind", "axis", "exchange", "use_kernels",
+                      "halo_quant", "interpret", "geometry", "mesh_key")
+
+
 def _program_key(tag: str, kind: str, pg: PartitionedGraph, mesh: Mesh,
                  axis: str, exchange: str, use_kernels: bool,
                  halo_quant: bool, interpret: bool) -> tuple:

@@ -1,0 +1,37 @@
+"""Suite-wide fixtures.
+
+Every ``Plan`` that ``Engine.compile`` / ``Engine.apply_delta`` produces
+anywhere in the tier-1 suite is run through the ``repro.analysis`` plan
+invariant checks in warn mode, so a layout/update regression surfaces as a
+``PlanInvariantWarning`` in whichever test built the plan — without that
+test knowing about the verifier.  Opt out per-test with
+``@pytest.mark.no_plan_invariants`` (e.g. when deliberately building a
+corrupt plan).
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _plan_invariants(request, monkeypatch):
+    if request.node.get_closest_marker("no_plan_invariants"):
+        yield
+        return
+    from repro.analysis import verify_plan
+    from repro.api.engine import Engine
+
+    orig_compile = Engine.compile
+    orig_apply = Engine.apply_delta
+
+    def compile_checked(self, graph):
+        plan = orig_compile(self, graph)
+        verify_plan(plan, mode="warn")
+        return plan
+
+    def apply_checked(self, plan, delta, **kw):
+        out = orig_apply(self, plan, delta, **kw)
+        verify_plan(out, mode="warn")
+        return out
+
+    monkeypatch.setattr(Engine, "compile", compile_checked)
+    monkeypatch.setattr(Engine, "apply_delta", apply_checked)
+    yield

@@ -1,0 +1,435 @@
+"""Mutation tests for the repro.analysis static verifier.
+
+Each test corrupts one structure a real serving path depends on and
+asserts the matching check fires with the right check-id — and the
+verifier's silence on every healthy plan is asserted across the registry
+grid.  Corruption happens on ``copy.deepcopy`` innards (Plan is frozen but
+its array contents are mutable), so the shared healthy plans stay healthy.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+import repro.analysis as analysis
+from repro.analysis import (AnalysisContext, PlanInvariantWarning,
+                            PlanValidationError, cache_audit, run_checks,
+                            verify_plan)
+from repro.api.engine import Engine
+from repro.gnn import datasets, models
+
+pytestmark = pytest.mark.no_plan_invariants
+
+PLAN_FAMILIES = ("plan", "kernel", "cache")
+
+
+def _make_plan(executor="mesh-bsp", compressor="daq", aggregation="pallas",
+               scale=0.03, seed=0):
+    g = datasets.load("siot", scale=scale, seed=seed)
+    params = models.gnn_init(jax.random.PRNGKey(seed), "gcn",
+                             [g.feature_dim, 16, 8])
+    eng = Engine((params, "gcn"), "1A+3B", executor=executor,
+                 compressor=compressor, aggregation=aggregation)
+    return eng, eng.compile(g)
+
+
+@pytest.fixture(scope="module")
+def mesh_plan():
+    return _make_plan()[1]
+
+
+@pytest.fixture()
+def corrupt(mesh_plan):
+    """A deep copy whose innards tests may freely mutate."""
+    return copy.deepcopy(mesh_plan)
+
+
+def _errors_of(plan_or_ctx, check_id, families=PLAN_FAMILIES):
+    report = run_checks(plan_or_ctx, families=families)
+    return report, report.by_check(check_id)
+
+
+# ---------------------------------------------------------------- healthy
+
+
+@pytest.mark.parametrize("executor,compressor,aggregation", [
+    ("sim", "none", "auto"),
+    ("single", "daq", "auto"),
+    ("mesh-bsp", "daq", "pallas"),
+    ("cloud", "uniform8", "auto"),
+])
+def test_silent_on_healthy_plans(executor, compressor, aggregation):
+    _, plan = _make_plan(executor=executor, compressor=compressor,
+                         aggregation=aggregation)
+    report = run_checks(plan, families=PLAN_FAMILIES)
+    assert report.ok, report.format()
+    assert not report.warnings, report.format()
+    # Every plan/kernel/cache check actually ran (none silently skipped).
+    assert len(report.ran) >= 12
+
+
+def test_healthy_plan_all_plan_checks_ran(mesh_plan):
+    report = run_checks(mesh_plan, families=("plan",))
+    want = {fn.check_id for fn in analysis.checks_for(("plan",))}
+    assert set(report.ran) == want
+    assert report.ok and not report.warnings, report.format()
+
+
+# ----------------------------------------------------------- plan family
+
+
+def test_corrupt_part_of_fires_coverage_and_update(corrupt):
+    pg = corrupt.partitioned
+    pg.part_of[0] = (pg.part_of[0] + 1) % pg.n
+    report = run_checks(corrupt, families=("plan",))
+    assert not report.ok
+    fired = report.check_ids()
+    assert "plan.update.consistency" in fired
+    # Depending on the stolen slot's occupancy the move lands on a dead
+    # slot (coverage) or on another vertex's slot (disjoint).
+    assert fired & {"plan.partition.coverage", "plan.partition.disjoint"}
+
+
+def test_duplicate_slot_fires_disjoint(corrupt):
+    pg = corrupt.partitioned
+    # Vertex 1 steals vertex 0's (partition, slot).
+    pg.part_of[1] = pg.part_of[0]
+    pg.slot_of[1] = pg.slot_of[0]
+    _, hits = _errors_of(corrupt, "plan.partition.disjoint",
+                         families=("plan",))
+    assert hits and hits[0].severity == "error"
+
+
+def test_nonbinary_mask_fires_layout_masks(corrupt):
+    corrupt.partitioned.vertex_mask[0, 0] = 0.5
+    _, hits = _errors_of(corrupt, "plan.layout.masks", families=("plan",))
+    assert hits
+
+
+def test_nonzero_padded_feature_row_fires_layout_masks(corrupt):
+    pg = corrupt.partitioned
+    dead = np.argwhere(pg.vertex_mask == 0.0)
+    if len(dead) == 0:
+        pytest.skip("layout has no padded slots at this scale")
+    p, s = dead[0]
+    pg.feats[p, s, 0] = 7.0
+    _, hits = _errors_of(corrupt, "plan.layout.masks", families=("plan",))
+    assert any("padded feature rows" in d.message for d in hits)
+
+
+def test_dropped_halo_row_fires_halo_consistency(corrupt):
+    pg = corrupt.partitioned
+    p = int(np.argmax(pg.boundary_mask.sum(axis=1)))
+    assert pg.boundary_mask[p].sum() > 0, "no boundary rows at this scale"
+    # Drop the partition's first exported halo row from the exchange map.
+    pg.boundary_mask[p, 0] = 0.0
+    _, hits = _errors_of(corrupt, "plan.halo.consistency",
+                         families=("plan",))
+    assert hits and f"[{p}]" in hits[0].subject
+
+
+def test_zeroed_halo_tile_fires_halo_consistency(corrupt):
+    csr = corrupt.partitioned.halo_csr
+    live = np.argwhere(np.asarray(csr.mask) == 1.0)
+    assert len(live), "halo shards empty at this scale"
+    p, i, k = live[0]
+    csr.mask[p, i, k] = 0.0
+    csr.blocks[p, i, k] = 0.0
+    csr.cols[p, i, k] = 0
+    report, hits = _errors_of(corrupt, "plan.halo.consistency",
+                              families=("plan",))
+    assert any("missing" in d.message for d in hits), report.format()
+
+
+def test_nonzero_padding_tile_fires_blocks_ell(corrupt):
+    csr = corrupt.partitioned.local_csr
+    pad = np.argwhere(np.asarray(csr.mask) == 0.0)
+    if len(pad) == 0:
+        pytest.skip("local shards have no ELL padding at this scale")
+    p, i, k = pad[0]
+    csr.blocks[p, i, k, 0, 0] = 1.0
+    _, hits = _errors_of(corrupt, "plan.blocks.ell", families=("plan",))
+    assert any("padding tiles carry" in d.message for d in hits)
+
+
+def test_skewed_estimates_fire_capacity_warning(corrupt):
+    pl = corrupt.placement
+    pl.est_exec[0] = 1000.0 * (pl.est_total.mean() + 1e-6)
+    report = run_checks(corrupt, families=("plan",))
+    hits = report.by_check("plan.capacity.imbalance")
+    assert hits and hits[0].severity == "warning"
+
+
+def test_stale_frozen_features_fire_update_consistency(corrupt):
+    pg = corrupt.partitioned
+    p, s = int(pg.part_of[0]), int(pg.slot_of[0])
+    pg.feats[p, s] += 1.0
+    _, hits = _errors_of(corrupt, "plan.update.consistency",
+                         families=("plan",))
+    assert any("frozen feature rows" in d.message for d in hits)
+
+
+def test_unknown_registry_key_fires_config_keys(corrupt):
+    object.__setattr__(corrupt.config, "compressor", "definitely-not-real")
+    _, hits = _errors_of(corrupt, "plan.config.keys", families=("plan",))
+    assert hits and "compressor" in hits[0].message
+
+
+# --------------------------------------------------------- kernel family
+
+
+def test_perturbed_block_cols_fire_prefetch_bounds(corrupt):
+    csr = corrupt.partitioned.halo_csr
+    live = np.argwhere(np.asarray(csr.mask) == 1.0)
+    assert len(live), "halo shards empty at this scale"
+    p, i, k = live[0]
+    block = csr.blocks.shape[-1]
+    csr.cols[p, i, k] = csr.src_rows // block + 3   # past the source table
+    report = run_checks(corrupt, families=("kernel",))
+    hits = report.by_check("kernel.prefetch.bounds")
+    assert hits and "bounds check" in hits[0].message
+
+
+def test_widened_wire_dtype_fires_wire_dtype(mesh_plan, monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.runtime import bsp
+
+    def float_wire(x):   # regression: ship f32 "codes" on the DAQ wire
+        return (x.astype(jnp.float32),
+                jnp.zeros((x.shape[0],), jnp.float32),
+                jnp.zeros((x.shape[0],), jnp.float32))
+
+    monkeypatch.setattr(bsp, "_wire_quantize", float_wire)
+    report = run_checks(mesh_plan, families=("kernel",))
+    hits = report.by_check("kernel.wire.dtype")
+    assert any("codes" in d.message for d in hits)
+    assert any("wire format" in d.message for d in hits)
+
+
+def test_wire_dtype_silent_on_healthy(mesh_plan):
+    report = run_checks(mesh_plan, families=("kernel",))
+    assert not report.by_check("kernel.wire.dtype")
+
+
+def test_inflated_src_rows_fire_vmem_budget(corrupt):
+    csr = corrupt.partitioned.halo_csr
+    block = csr.blocks.shape[-1]
+    object.__setattr__(csr, "src_rows", block * 40000)  # ~20 MiB f32 panel
+    report = run_checks(corrupt, families=("kernel",))
+    hits = report.by_check("kernel.vmem.budget")
+    assert hits and hits[0].severity == "warning"
+    assert "VMEM" in hits[0].message
+
+
+def test_grid_divisibility_fires_on_ragged_src_rows(corrupt):
+    csr = corrupt.partitioned.local_csr
+    object.__setattr__(csr, "src_rows", csr.src_rows + 1)
+    report = run_checks(corrupt, families=("kernel",))
+    assert report.by_check("kernel.grid.divisibility")
+
+
+# ---------------------------------------------------------- cache family
+
+
+def _ctx(plan=None, program_cache=None, block_csr_cache=None):
+    return AnalysisContext(plan=plan,
+                           program_cache=program_cache or {},
+                           block_csr_cache=block_csr_cache or {})
+
+
+def test_stripped_program_key_fires_key_fields():
+    # A key missing its trailing fields (as if a knob were dropped).
+    ctx = _ctx(program_cache={("mesh", "gcn", "fog"): lambda: None})
+    report = run_checks(ctx, families=("cache",))
+    hits = report.by_check("cache.program.key_fields")
+    assert any("collide" in d.message for d in hits)
+
+
+def test_mistyped_program_key_fires_key_fields():
+    key = ("mesh", "gcn", "fog", "halo", 1, False, False, (), ())  # int, not bool
+    ctx = _ctx(program_cache={key: lambda: None})
+    report = run_checks(ctx, families=("cache",))
+    hits = report.by_check("cache.program.key_fields")
+    assert any("use_kernels" in d.message for d in hits)
+
+
+def test_unclassified_knob_fires_key_fields(monkeypatch):
+    monkeypatch.delitem(cache_audit.KNOB_COVERAGE, "aggregation")
+    report = run_checks(_ctx(), families=("cache",))
+    hits = report.by_check("cache.program.key_fields")
+    assert any("EngineConfig.aggregation" in d.subject for d in hits)
+
+
+def test_malformed_blockcsr_key_fires_key_fields():
+    ctx = _ctx(block_csr_cache={("deadbeef", None, 128): object(),
+                                ("x" * 32, "median", 128): object()})
+    report = run_checks(ctx, families=("cache",))
+    hits = report.by_check("cache.blockcsr.key_fields")
+    assert any("digest" in d.message for d in hits)
+    assert any("normalization" in d.message for d in hits)
+
+
+def test_closure_pin_fires():
+    big = np.zeros(4096, np.float32)
+
+    def make_leaky():
+        pinned = big
+
+        def program(x):
+            return pinned
+
+        return program
+
+    ctx = _ctx(program_cache={("k",): make_leaky()})
+    report = run_checks(ctx, families=("cache",))
+    hits = report.by_check("cache.program.closure_pins")
+    assert any("pinned" in d.message for d in hits)
+
+
+def test_live_caches_are_clean_after_serving():
+    # Exercise the real single-program BlockCsr cache, then audit the
+    # live process-wide caches (the mesh program cache needs a 4-device
+    # subprocess; its live audit runs inside test_bsp's mesh workers).
+    _, plan = _make_plan(executor="single", aggregation="pallas")
+    plan.session().query()
+    from repro.kernels import ops
+    assert len(ops._BLOCK_CSR_CACHE) > 0
+    report = run_checks(AnalysisContext(), families=("cache",))
+    assert report.ok, report.format()
+
+
+# ------------------------------------------------- verify_plan + Engine
+
+
+def test_verify_plan_strict_raises(corrupt):
+    corrupt.partitioned.part_of[0] = (corrupt.partitioned.part_of[0] + 1
+                                      ) % corrupt.partitioned.n
+    with pytest.raises(PlanValidationError) as ei:
+        verify_plan(corrupt, mode="strict")
+    assert "plan." in str(ei.value)
+    assert ei.value.report.errors
+
+
+def test_verify_plan_warn_warns(corrupt):
+    corrupt.partitioned.part_of[0] = (corrupt.partitioned.part_of[0] + 1
+                                      ) % corrupt.partitioned.n
+    with pytest.warns(PlanInvariantWarning):
+        verify_plan(corrupt, mode="warn")
+
+
+def test_verify_plan_off_is_noop(corrupt):
+    corrupt.partitioned.part_of[0] = (corrupt.partitioned.part_of[0] + 1
+                                      ) % corrupt.partitioned.n
+    report = verify_plan(corrupt, mode="off")
+    assert report.diagnostics == []
+
+
+def test_verify_plan_rejects_unknown_mode(mesh_plan):
+    with pytest.raises(ValueError, match="validate mode"):
+        verify_plan(mesh_plan, mode="loud")
+
+
+def test_engine_validate_strict_passes_healthy_plan():
+    g = datasets.load("siot", scale=0.03, seed=2)
+    params = models.gnn_init(jax.random.PRNGKey(2), "gcn",
+                             [g.feature_dim, 16, 8])
+    eng = Engine((params, "gcn"), "1A+3B", executor="mesh-bsp",
+                 aggregation="pallas", validate="strict")
+    plan = eng.compile(g)
+    assert plan.config.validate == "strict"
+    assert Engine.from_plan(plan).config.validate == "strict"
+
+
+def test_engine_validate_strict_covers_apply_delta():
+    from repro.api.updates import GraphDelta
+    g = datasets.load("siot", scale=0.03, seed=3)
+    params = models.gnn_init(jax.random.PRNGKey(3), "gcn",
+                             [g.feature_dim, 16, 8])
+    eng = Engine((params, "gcn"), "1A+3B", executor="mesh-bsp",
+                 aggregation="pallas", validate="strict")
+    plan = eng.compile(g)
+    v = g.num_vertices
+    delta = GraphDelta(add_features=np.ones((1, g.feature_dim), np.float32),
+                       add_edges=[(v, 0)])
+    updated = eng.apply_delta(plan, delta, force="incremental")
+    assert updated.provenance == "incremental"
+
+
+def test_engine_rejects_unknown_validate():
+    g = datasets.load("siot", scale=0.03, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    with pytest.raises(ValueError, match="validate"):
+        Engine((params, "gcn"), "1A+3B", validate="shout")
+
+
+def test_run_checks_reports_crashing_check(mesh_plan, monkeypatch):
+    from repro.analysis import CHECKS
+
+    def boom(ctx):
+        raise RuntimeError("verifier bug")
+
+    boom.check_id = "plan.partition.coverage"
+    boom.family, boom.layer, boom.requires = "plan", "plan", ("plan",)
+    monkeypatch.setitem(CHECKS._entries, "plan.partition.coverage", boom)
+    report = run_checks(mesh_plan, families=("plan",),
+                        checks=["plan.partition.coverage"])
+    hits = report.by_check("plan.partition.coverage")
+    assert any("check crashed" in d.message for d in hits)
+
+
+def test_cli_list_and_catalogue():
+    from repro.analysis.cli import main
+    assert main(["--list"]) == 0
+
+
+# --------------------------------------- shipped-stack regression probes
+
+
+def test_empty_trailing_shard_update_passes_checks():
+    """PR 4's ``n=`` path: a delta that empties the trailing partition
+    must still produce a layout the verifier accepts (the empty shard
+    keeps its slot geometry, exports no halo rows, and its block-CSR
+    tiles are all padding)."""
+    from repro.api.updates import GraphDelta
+    eng, plan = _make_plan(seed=4)
+    last = plan.partitioned.n - 1
+    victims = np.flatnonzero(plan.placement.assignment == last)
+    updated = eng.apply_delta(plan, GraphDelta(remove_vertices=victims),
+                              force="incremental")
+    assert updated.partitioned.n == plan.partitioned.n   # n pinned
+    assert np.bincount(updated.partitioned.part_of,
+                       minlength=updated.partitioned.n)[last] == 0
+    report = run_checks(updated, families=("plan", "kernel"))
+    assert report.ok and not report.warnings, report.format()
+
+
+def test_slo_rung_sessions_rebased_after_structural_update():
+    """SLO ladder rungs cache Sessions keyed on the base plan's identity;
+    after a structural update rebases the base session, every rung must
+    serve the new layout — and every rung plan must pass the verifier."""
+    from repro.api.updates import GraphDelta
+    g = datasets.load("siot", scale=0.03, seed=5)
+    params = models.gnn_init(jax.random.PRNGKey(5), "gcn",
+                             [g.feature_dim, 16, 8])
+    plan = Engine((params, "gcn"), "1A+3B", executor="sim",
+                  compressor="daq").compile(g)
+    server = plan.server(slo=True)
+    for lvl in range(len(server.ladder) + 1):
+        server._session_for(lvl)          # build every rung pre-update
+    old_partitioned = server.session.plan.partitioned
+    v = g.num_vertices
+    server.submit(GraphDelta(
+        add_features=np.ones((2, g.feature_dim), np.float32),
+        add_edges=[(v, 0), (v + 1, 1)],
+        remove_edges=[(int(g.senders[0]), int(g.receivers[0]))]))
+    (ack,) = server.drain()
+    assert ack.applied
+    for lvl in range(len(server.ladder) + 1):
+        rung_plan = server._session_for(lvl).plan
+        assert rung_plan.partitioned is not old_partitioned
+        assert rung_plan.graph.num_vertices == v + 2
+        report = run_checks(rung_plan, families=("plan",))
+        assert report.ok and not report.warnings, report.format()

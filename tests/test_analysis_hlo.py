@@ -1,0 +1,152 @@
+"""Unit tests for the HLO call-graph/trip-count analyzer on a canned
+module — locking parse/multiplier/flops behavior now that the analyzer
+lives in ``repro.analysis.hlo`` (with ``repro.launch.hlo_analysis`` as a
+re-export shim)."""
+import pytest
+
+from repro.analysis import AnalysisContext, hlo, run_checks
+
+# A hand-written post-optimization-style module: a while loop with
+# known_trip_count=3 whose body does one 8x16 @ 16x16 dot, then an
+# all-reduce of the result in ENTRY.
+CANNED = """\
+HloModule canned
+
+%add.red (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+
+%cond (state.c: (f32[8,16], s32[])) -> pred[] {
+  %state.c = (f32[8,16], s32[]) parameter(0)
+  %iter = s32[] get-tuple-element(%state.c), index=1
+  %limit = s32[] constant(3)
+  ROOT %lt = pred[] compare(%iter, %limit), direction=LT
+}
+
+%body (state.b: (f32[8,16], s32[])) -> (f32[8,16], s32[]) {
+  %state.b = (f32[8,16], s32[]) parameter(0)
+  %h = f32[8,16] get-tuple-element(%state.b), index=0
+  %i = s32[] get-tuple-element(%state.b), index=1
+  %w = f32[16,16] constant(0)
+  %mm = f32[8,16] dot(%h, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %out = (f32[8,16], s32[]) tuple(%mm, %i2)
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (f32[8,16], s32[]) tuple(%p0, %zero)
+  %loop = (f32[8,16], s32[]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"3"}}
+  %res = f32[8,16] get-tuple-element(%loop), index=0
+  ROOT %ar = f32[8,16] all-reduce(%res), replica_groups={}, to_apply=%add.red
+}
+"""
+
+
+def test_parse_module_structure():
+    comps, shapes, entry = hlo.parse_module(CANNED)
+    assert entry == "main"
+    assert set(comps) == {"add.red", "cond", "body", "main"}
+    assert shapes["mm"] == "f32[8,16]"
+    assert shapes["w"] == "f32[16,16]"
+    ops = {op.name: op for op in comps["main"].ops}
+    assert ops["loop"].opcode == "while"
+    assert ops["ar"].opcode == "all-reduce"
+
+
+def test_call_edges_and_trip_count():
+    comps, _, _ = hlo.parse_module(CANNED)
+    loop = next(op for op in comps["main"].ops if op.opcode == "while")
+    edges = dict(hlo._call_edges(loop))
+    assert edges == {"cond": True, "body": True}
+    assert hlo._trip_count(loop) == 3
+    ar = next(op for op in comps["main"].ops if op.opcode == "all-reduce")
+    assert dict(hlo._call_edges(ar)) == {"add.red": False}
+
+
+def test_computation_multipliers_multiply_trip_counts():
+    comps, _, entry = hlo.parse_module(CANNED)
+    mult = hlo.computation_multipliers(comps, entry)
+    assert mult["main"] == 1.0
+    assert mult["body"] == 3.0      # while body runs known_trip_count times
+    assert mult["cond"] == 3.0
+    assert mult["add.red"] == 1.0   # to_apply is not a loop edge
+
+
+def test_dot_flops_scaled_by_loop():
+    cost = hlo.analyze(CANNED)
+    # one 8x16 @ 16x16 dot: 2 * 128 results * 16 contracted = 4096 flops,
+    # executed 3 times by the while loop.
+    assert cost.unscaled_flops == pytest.approx(4096.0)
+    assert cost.flops == pytest.approx(3 * 4096.0)
+    assert cost.dot_count == 1
+
+
+def test_collective_bytes_counted_once():
+    cost = hlo.analyze(CANNED)
+    # all-reduce of f32[8,16] in ENTRY (multiplier 1): 512 bytes.
+    assert cost.collective_bytes["all-reduce"] == pytest.approx(512.0)
+    assert cost.total_collective == pytest.approx(512.0)
+    assert cost.bytes_accessed > 0
+
+
+def test_shape_elems_bytes():
+    elems, nbytes = hlo._shape_elems_bytes("(f32[8,16], s32[])")
+    assert elems == 128 + 1
+    assert nbytes == 512 + 4
+
+
+def test_shim_reexports_same_objects():
+    from repro.launch import hlo_analysis as shim
+    assert shim.analyze is hlo.analyze
+    assert shim.parse_module is hlo.parse_module
+    assert shim.HloCost is hlo.HloCost
+    assert shim.computation_multipliers is hlo.computation_multipliers
+
+
+def test_hlo_check_clean_on_canned_module():
+    report = run_checks(AnalysisContext(hlo=CANNED), families=("hlo",))
+    assert report.ran == ("hlo.module.structure",)
+    assert report.ok and not report.warnings, report.format()
+
+
+def test_hlo_check_fires_on_garbage_and_truncation():
+    report = run_checks(AnalysisContext(hlo="not an hlo module"),
+                        families=("hlo",))
+    assert any("no computations" in d.message
+               for d in report.by_check("hlo.module.structure"))
+    truncated = CANNED.replace("body=%body", "body=%missing.comp")
+    report = run_checks(AnalysisContext(hlo=truncated), families=("hlo",))
+    hits = report.by_check("hlo.module.structure")
+    assert any(d.severity == "warning" and "missing" in d.message
+               for d in hits)
+
+
+def test_hlo_check_skipped_without_hlo_text():
+    report = run_checks(AnalysisContext(plan=None), families=("hlo",))
+    assert report.ran == ()
+    assert "hlo.module.structure" in report.skipped
+
+
+def test_analyze_real_lowered_module():
+    """End-to-end on a real jitted scan: trip count multiplies the dot."""
+    import jax
+    import jax.numpy as jnp
+
+    def stack(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=4)
+        return h
+
+    x = jnp.zeros((8, 16), jnp.float32)
+    w = jnp.zeros((16, 16), jnp.float32)
+    text = jax.jit(stack).lower(x, w).compile().as_text()
+    cost = hlo.analyze(text)
+    assert cost.dot_count >= 1
+    # 4 iterations x 2*8*16*16 flops per dot.
+    assert cost.flops >= 4 * 4096
