@@ -15,8 +15,16 @@ Every row also checks *parity*: a query on the incrementally updated plan
 must be bit-identical to a query on the freshly compiled plan (both via the
 single-program executor, whose numerics are partition-independent).
 
-    PYTHONPATH=src python benchmarks/updates.py            # full sweep
-    PYTHONPATH=src python benchmarks/updates.py --smoke    # CI guard
+A second sweep times the *incremental query* path: a
+``Session(activation_cache=True)`` serving localized deltas on a grid
+graph recomputes only the k-hop dirty frontier and scatter-merges into
+cached activations — O(affected) instead of O(V) per query — against a
+cache-less session on the same plan chain, asserting bit-parity every
+round and recording the speedup under ``incremental_query``.
+
+    PYTHONPATH=src python benchmarks/updates.py                  # full sweep
+    PYTHONPATH=src python benchmarks/updates.py --smoke              # CI guard
+    PYTHONPATH=src python benchmarks/updates.py --smoke-incremental  # CI guard
 """
 from __future__ import annotations
 
@@ -180,10 +188,127 @@ def run_config(args, aggregation: str, frac: float, n_updates: int,
     }
 
 
+def grid_graph(side: int, feature_dim: int, seed: int):
+    """4-neighbor grid of ``side**2`` sensors — the spatially local
+    topology of co-located IoT deployments, where a delta's k-hop ball
+    stays small (dense RMAT graphs blow past the frontier budget)."""
+    from repro.gnn.graph import from_edge_list
+    rng = np.random.default_rng(seed)
+    v = side * side
+    ids = np.arange(v).reshape(side, side)
+    right = np.stack([ids[:, :-1].ravel(), ids[:, 1:].ravel()], axis=1)
+    down = np.stack([ids[:-1, :].ravel(), ids[1:, :].ravel()], axis=1)
+    feats = rng.normal(size=(v, feature_dim)).astype(np.float32)
+    return from_edge_list(v, np.concatenate([right, down]), feats)
+
+
+def incremental_delta(graph, frac: float, rng: np.random.Generator,
+                      structural: bool):
+    """A localized delta touching ~``frac`` of V contiguous (= spatially
+    adjacent) vertices: feature upserts, plus an E-neutral edge swap
+    (one pair added, one removed — removed-edge invalidation included)
+    when ``structural``. Feature-only streams keep the Pallas
+    incremental path armed (see core.frontier.ActivationCache), and a
+    constant E keeps the full-recompute baseline at steady state
+    instead of re-jitting on every new edge count.
+    """
+    from repro.api import GraphDelta
+    v = graph.num_vertices
+    k = max(1, int(frac * v))
+    c = int(rng.integers(0, v - k))
+    ids = np.arange(c, c + k)
+    kw = dict(feature_ids=ids,
+              feature_values=rng.normal(
+                  size=(k, graph.feature_dim)).astype(np.float32))
+    if structural:
+        u, w = int(ids[0]), int(ids[-1])
+        e = int(rng.integers(0, graph.num_edges))
+        s, r = int(graph.senders[e]), int(graph.receivers[e])
+        kw["add_edges"] = [(u, w), (w, u)]
+        kw["remove_edges"] = [(s, r), (r, s)]
+    return GraphDelta(**kw)
+
+
+def run_incremental(args, aggregation: str, frac: float,
+                    seed: int) -> dict:
+    """Incremental (activation-cache) query vs full recompute on the
+    same plan chain: two sessions fed identical deltas, one with
+    ``activation_cache=True``; every round asserts bit-parity and times
+    both executes."""
+    import jax
+
+    from repro.api import Engine
+    from repro.gnn import models
+
+    g = grid_graph(args.grid_side, 16, seed)
+    params = models.gnn_init(jax.random.PRNGKey(seed), args.kind,
+                             [g.feature_dim, args.hidden, 8])
+    engine = Engine((params, args.kind), cluster=args.cluster,
+                    network=args.network, compressor="none",
+                    executor="sim", aggregation=aggregation)
+    plan = engine.compile(g)
+    inc = plan.session(activation_cache=True)
+    ref = plan.session()
+    rng = np.random.default_rng(seed)
+    structural = aggregation != "pallas"
+    # Warmup: populate the cache, compile the full + frontier programs.
+    inc.execute(inc.collect(None))
+    ref.execute(ref.collect(None))
+    for _ in range(2):
+        d0 = incremental_delta(inc.plan.graph, frac, rng, structural)
+        inc.update(d0)
+        ref.update(d0)
+        inc.execute(inc.collect(None))
+        ref.execute(ref.collect(None))
+    times_inc, times_full = [], []
+    parity = True
+    hits = 0
+    frontier_frac = []
+    from repro.kernels import ops as _ops
+    for _ in range(args.inc_rounds):
+        d = incremental_delta(inc.plan.graph, frac, rng, structural)
+        inc.update(d)
+        ref.update(d)
+        if aggregation == "pallas":
+            # Plan-level operand build (cached per graph fingerprint):
+            # both paths need it; don't bill it to whichever runs first.
+            _ops.block_csr_for(inc.plan.graph)
+        # np.asarray inside the timed region: a jax backend may hand
+        # back an unmaterialized array, and the compute must be billed
+        # to the path that launched it.
+        t0 = time.perf_counter()
+        e1 = np.asarray(inc.execute(inc.collect(None)))
+        times_inc.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        e2 = np.asarray(ref.execute(ref.collect(None)))
+        times_full.append(time.perf_counter() - t0)
+        parity = parity and bool(np.array_equal(e1, e2))
+        if inc.last_frontier is not None:
+            hits += 1
+            frontier_frac.append(inc.last_frontier.fraction)
+    # Medians: a round that hits a not-yet-compiled frontier bucket pays
+    # one-off jit tracing that steady-state serving never sees.
+    t_inc = float(np.median(times_inc))
+    t_full = float(np.median(times_full))
+    return {
+        "aggregation": aggregation, "delta_frac": frac,
+        "rounds": args.inc_rounds, "incremental_hits": hits,
+        "t_incremental_s": t_inc, "t_full_recompute_s": t_full,
+        "speedup": t_full / max(t_inc, 1e-12),
+        "frontier_fraction_mean": (float(np.mean(frontier_frac))
+                                   if frontier_frac else None),
+        "vertices": inc.plan.graph.num_vertices,
+        "parity_bit_identical": parity,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep + parity guard (for scripts/ci.sh)")
+    ap.add_argument("--smoke-incremental", action="store_true",
+                    help="tiny incremental-query parity guard only "
+                         "(for scripts/ci.sh)")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_updates.json"))
     ap.add_argument("--dataset", default="siot")
     ap.add_argument("--scale", type=float, default=0.3)
@@ -202,6 +327,14 @@ def main(argv=None) -> int:
                     default=["global", "local"],
                     help="'local' confines each delta to one partition "
                          "(exercises dirty-shard reuse)")
+    ap.add_argument("--grid-side", type=int, default=200,
+                    help="side of the grid graph for the incremental-"
+                         "query sweep (V = side**2)")
+    ap.add_argument("--inc-rounds", type=int, default=5,
+                    help="timed delta->query rounds per incremental row")
+    ap.add_argument("--inc-fracs", type=float, nargs="+",
+                    default=[0.001, 0.005],
+                    help="delta sizes for the incremental-query sweep")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -210,35 +343,62 @@ def main(argv=None) -> int:
         args.fracs = [0.02]
         args.updates = [2]
         args.localities = ["global"]
-        if args.out == ap.get_default("out"):   # don't dirty the worktree
-            import tempfile
-            args.out = os.path.join(tempfile.gettempdir(),
-                                    "BENCH_updates.smoke.json")
+    if args.smoke_incremental:
+        if args.grid_side == ap.get_default("grid_side"):
+            args.grid_side = 40
+        if args.inc_rounds == ap.get_default("inc_rounds"):
+            args.inc_rounds = 3
+        if args.inc_fracs == ap.get_default("inc_fracs"):
+            args.inc_fracs = [0.01]
+    if ((args.smoke or args.smoke_incremental)
+            and args.out == ap.get_default("out")):
+        import tempfile                         # don't dirty the worktree
+        args.out = os.path.join(tempfile.gettempdir(),
+                                "BENCH_updates.smoke.json")
 
     sweep = []
-    print("aggregation,locality,delta_frac,n_updates,t_incremental_s,"
-          "t_full_recompile_s,speedup,shards_rebuilt,parity")
-    for aggregation in args.aggregations:
-        for locality in args.localities:
-            for frac in args.fracs:
-                for n_updates in args.updates:
-                    row = run_config(args, aggregation, frac, n_updates,
-                                     args.seed, locality)
-                    sweep.append(row)
-                    print(f"{aggregation},{locality},{frac},{n_updates},"
-                          f"{row['t_incremental_s']:.4f},"
-                          f"{row['t_full_recompile_s']:.4f},"
-                          f"{row['speedup']:.2f},{row['shards_rebuilt']},"
-                          f"{row['parity_bit_identical']}")
+    if not args.smoke_incremental:
+        print("aggregation,locality,delta_frac,n_updates,t_incremental_s,"
+              "t_full_recompile_s,speedup,shards_rebuilt,parity")
+        for aggregation in args.aggregations:
+            for locality in args.localities:
+                for frac in args.fracs:
+                    for n_updates in args.updates:
+                        row = run_config(args, aggregation, frac, n_updates,
+                                         args.seed, locality)
+                        sweep.append(row)
+                        print(f"{aggregation},{locality},{frac},{n_updates},"
+                              f"{row['t_incremental_s']:.4f},"
+                              f"{row['t_full_recompile_s']:.4f},"
+                              f"{row['speedup']:.2f},"
+                              f"{row['shards_rebuilt']},"
+                              f"{row['parity_bit_identical']}")
+
+    inc_sweep = []
+    if args.smoke_incremental or not args.smoke:
+        print("incremental-query: aggregation,delta_frac,hits,"
+              "t_incremental_s,t_full_recompute_s,speedup,parity")
+        for aggregation in args.aggregations:
+            for frac in args.inc_fracs:
+                row = run_incremental(args, aggregation, frac, args.seed)
+                inc_sweep.append(row)
+                print(f"{aggregation},{frac},"
+                      f"{row['incremental_hits']}/{row['rounds']},"
+                      f"{row['t_incremental_s']:.4f},"
+                      f"{row['t_full_recompute_s']:.4f},"
+                      f"{row['speedup']:.2f},"
+                      f"{row['parity_bit_identical']}")
 
     payload = {
         "benchmark": "dynamic_graph_updates",
-        "config": {k: v for k, v in vars(args).items() if k != "smoke"},
+        "config": {k: v for k, v in vars(args).items()
+                   if k not in ("smoke", "smoke_incremental")},
         "sweep": sweep,
+        "incremental_query": inc_sweep,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
-    print(f"wrote {args.out} ({len(sweep)} rows)")
+    print(f"wrote {args.out} ({len(sweep) + len(inc_sweep)} rows)")
 
     # Guards. Parity is unconditional: an incrementally repaired plan must
     # answer queries bit-identically to a full recompile of the same
@@ -248,8 +408,25 @@ def main(argv=None) -> int:
     if bad:
         print(f"FAIL: {len(bad)} rows broke incremental==full parity")
         return 1
-    print("PASS: incremental plans are bit-identical to full recompiles")
-    if not args.smoke:
+    if sweep:
+        print("PASS: incremental plans are bit-identical to full "
+              "recompiles")
+    # Incremental-query guards: bit-parity with full recompute always;
+    # every round must actually take the frontier path.
+    bad = [r for r in inc_sweep if not r["parity_bit_identical"]]
+    if bad:
+        print(f"FAIL: {len(bad)} incremental-query rows broke "
+              f"cache==recompute parity")
+        return 1
+    cold = [r for r in inc_sweep if r["incremental_hits"] < r["rounds"]]
+    if cold:
+        print(f"FAIL: {len(cold)} incremental-query rows fell back to "
+              f"full recompute")
+        return 1
+    if inc_sweep:
+        print("PASS: cached incremental queries are bit-identical to "
+              "full recompute")
+    if not args.smoke and not args.smoke_incremental:
         # Acceptance: small deltas (<=5% of vertices) must beat a full
         # recompile in wall-clock on >=4-partition graphs.
         slow = [r for r in sweep
@@ -261,6 +438,13 @@ def main(argv=None) -> int:
             return 1
         print("PASS: apply_delta beats full Engine.compile for small "
               "deltas")
+        slow = [r for r in inc_sweep if r["speedup"] < 3.0]
+        if slow:
+            print(f"FAIL: {len(slow)} incremental-query rows under the "
+                  f"3x speedup floor")
+            return 1
+        print("PASS: incremental queries beat full recompute >=3x on "
+              "small deltas")
     return 0
 
 

@@ -24,6 +24,9 @@ PYTHONPATH=src python benchmarks/roofline.py --smoke
 # Dynamic-graph updates: incremental apply_delta must stay bit-identical
 # to a full Engine.compile of the mutated graph.
 PYTHONPATH=src python benchmarks/updates.py --smoke
+# Incremental queries: the activation-cache dirty-frontier path must stay
+# bit-identical to full recompute and take the frontier path every round.
+PYTHONPATH=src python benchmarks/updates.py --smoke-incremental
 # Batch-axis executor dispatch: batched run_many must stay bit-identical
 # to the serial per-request loop (and beat it at B>=8).
 PYTHONPATH=src python benchmarks/serving_latency.py --smoke

@@ -2,15 +2,17 @@
 
 Audits compiled :class:`~repro.api.plan.Plan` objects, the Pallas launch
 geometry they imply, and the process-wide program/operand caches *without
-executing anything*.  Four analyzer families (see ``docs/analysis.md`` for
+executing anything*.  Five analyzer families (see ``docs/analysis.md`` for
 the invariant catalogue):
 
-  plan    partition coverage/disjointness, halo consistency, ELL padding,
-          capacity skew, post-update layout agreement
-  kernel  jax.eval_shape lint of block_spmm / dequant_spmm launches:
-          grid divisibility, prefetch-table bounds, wire dtype, VMEM/SMEM
-  cache   program/BlockCsr cache-key completeness + closure-pin detection
-  hlo     post-lowering roofline-term extraction (ex launch.hlo_analysis)
+  plan      partition coverage/disjointness, halo consistency, ELL padding,
+            capacity skew, post-update layout agreement
+  frontier  dirty-frontier closure soundness + cache-revision agreement of
+            a session's pending incremental state
+  kernel    jax.eval_shape lint of block_spmm / dequant_spmm launches:
+            grid divisibility, prefetch-table bounds, wire dtype, VMEM/SMEM
+  cache     program/BlockCsr cache-key completeness + closure-pin detection
+  hlo       post-lowering roofline-term extraction (ex launch.hlo_analysis)
 
 Entry points::
 
@@ -30,6 +32,7 @@ from repro.analysis.diagnostics import (AnalysisContext, CHECKS, Diagnostic,
 
 # Importing the check modules registers every check in CHECKS.
 from repro.analysis import cache_audit    # noqa: E402,F401
+from repro.analysis import frontier_checks  # noqa: E402,F401
 from repro.analysis import hlo            # noqa: E402,F401
 from repro.analysis import kernel_lint    # noqa: E402,F401
 from repro.analysis import plan_checks    # noqa: E402,F401
@@ -37,6 +40,6 @@ from repro.analysis import plan_checks    # noqa: E402,F401
 __all__ = [
     "AnalysisContext", "CHECKS", "Diagnostic", "PlanInvariantWarning",
     "PlanValidationError", "Report", "SEVERITIES", "VALIDATE_MODES",
-    "cache_audit", "checks_for", "hlo", "kernel_lint", "plan_checks",
-    "register_check", "run_checks", "verify_plan",
+    "cache_audit", "checks_for", "frontier_checks", "hlo", "kernel_lint",
+    "plan_checks", "register_check", "run_checks", "verify_plan",
 ]

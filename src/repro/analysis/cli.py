@@ -73,6 +73,35 @@ def _demo_update_plan():
     return engine, engine.apply_delta(plan, delta, force="incremental")
 
 
+def _demo_frontier():
+    """One frontier-bearing session: query, flush a delta, snapshot.
+
+    Exercises the ``frontier`` family against live incremental state —
+    a cache-enabled session whose pending dirty frontier spans a real
+    flushed delta (feature upsert + edge add).
+    """
+    import jax
+    import numpy as np
+
+    from repro.api.engine import Engine
+    from repro.api.updates import GraphDelta
+    from repro.gnn import datasets, models
+
+    g = datasets.load("siot", scale=DEMO_SCALE, seed=2)
+    params = models.gnn_init(jax.random.PRNGKey(2), "gcn",
+                             [g.feature_dim, 16, 8])
+    engine = Engine((params, "gcn"), "1A+3B", executor="sim",
+                    aggregation="segment_sum")
+    sess = engine.compile(g).session(activation_cache=True)
+    sess.query()                                  # populate the cache
+    v = g.num_vertices
+    sess.update(GraphDelta(
+        add_edges=[(0, v // 2), (v // 2, 0)],
+        feature_ids=[1],
+        feature_values=np.ones((1, g.feature_dim), np.float32)))
+    return sess
+
+
 def _demo_hlo() -> str:
     """Lowered HLO text of a small jitted layer stack."""
     import jax
@@ -112,7 +141,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="exit nonzero on warnings too")
     p.add_argument("--families",
                    help="comma-separated analyzer families to run "
-                        "(plan,kernel,cache,hlo; default all applicable)")
+                        "(plan,frontier,kernel,cache,hlo; default all "
+                        "applicable)")
     p.add_argument("--list", action="store_true", dest="list_checks",
                    help="print the check catalogue and exit")
     p.add_argument("-v", "--verbose", action="store_true",
@@ -157,6 +187,12 @@ def main(argv: Optional[List[str]] = None) -> int:
             _engine, updated = _demo_update_plan()
             run("apply_delta[structural]", AnalysisContext(plan=updated),
                 families or ("plan", "kernel", "cache"))
+        if families is None or "frontier" in families:
+            sess = _demo_frontier()
+            run("frontier[pending-delta]",
+                AnalysisContext(plan=sess.plan,
+                                frontier=sess.frontier_state()),
+                families or ("plan", "frontier", "kernel", "cache"))
         if families is None or "hlo" in families:
             run("hlo[scan-stack]", AnalysisContext(hlo=_demo_hlo()),
                 ("hlo",))

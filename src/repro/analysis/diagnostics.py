@@ -84,6 +84,10 @@ class AnalysisContext:
     hlo: Optional[str] = None
     program_cache: Optional[dict] = None
     block_csr_cache: Optional[dict] = None
+    #: pending dirty-frontier snapshot (:class:`repro.core.frontier.
+    #: FrontierPlan`, from ``Session.frontier_state()``) for the frontier
+    #: family; None on sessions without an activation cache.
+    frontier: Optional[object] = None
     #: representative micro-batch size for lint of the batched kernels.
     batch_probe: int = 8
 

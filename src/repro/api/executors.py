@@ -47,12 +47,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.registry import EXECUTORS
-from repro.gnn.layers import EdgeList, apply_layer_with_sum
-from repro.gnn.models import gnn_apply
+from repro.gnn.layers import EdgeList, aggregate_sum, apply_layer_with_sum
+from repro.gnn.models import gnn_apply, gnn_apply_layers
 from repro.kernels import ops
 from repro.kernels.gather_aggregate import (block_spmm, block_spmm_batched,
                                             padded_feature_dim)
 from repro.runtime import bsp
+
+#: model kinds the incremental frontier path supports: their per-layer
+#: aggregation is a static SUM over fixed adjacency, so a row subset can
+#: be recomputed from sub-edges (GAT re-weights edges per layer from all
+#: rows' values, so a dirty-row restriction is unsound).
+FRONTIER_KINDS = ("gcn", "sage")
 
 
 def _as_stack(feats: Union[np.ndarray, Sequence[np.ndarray]]) -> np.ndarray:
@@ -109,6 +115,37 @@ class ExecutorBackend:
         return [self.run(plan, f, assignment, pg, exchange,
                          aggregation=aggregation)
                 for f in _as_stack(feats)]
+
+    # -- incremental (frontier) execution ------------------------------------
+
+    #: numerics family tag for the activation cache: values cached under
+    #: one family must not be merged into another's recompute ("single"
+    #: covers sim/single/cloud, which share one jitted program).
+    frontier_family = "single"
+
+    def supports_frontier(self, plan, aggregation: str) -> bool:
+        """Whether ``run_frontier``/``run_layers`` exist for this plan."""
+        return False
+
+    def run_layers(self, plan, feats, assignment, pg, exchange,
+                   aggregation: str = "segment_sum") -> List[np.ndarray]:
+        """Full pass that also returns every layer's activations.
+
+        ``feats`` is [V, F] (returns K arrays [V, F_l]) or a stacked
+        [B, V, F] micro-batch (returns K arrays [B, V, F_l]); the last
+        entry is the plain ``run``/``run_many`` output, bit for bit.
+        """
+        raise NotImplementedError
+
+    def run_frontier(self, plan, feats, assignment, pg, exchange,
+                     aggregation, rows_per_layer, cached_layers):
+        """Incremental pass: recompute only ``rows_per_layer[l]`` per
+        layer and scatter-merge into ``cached_layers``. Returns
+        ``(embeddings, merged_layers)`` where embeddings is [V, D] (or a
+        list of [V, D] for a stacked ``feats``) bit-identical to a full
+        recompute, and merged_layers is the new cache state.
+        """
+        raise NotImplementedError
 
 
 @functools.partial(jax.jit, static_argnames=("kind",))
@@ -181,6 +218,204 @@ def _kernel_gnn_apply(params, kind, h, senders, receivers, mask,
     return h
 
 
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _jit_gnn_capture(params, kind, h, senders, receivers, mask):
+    """``_jit_gnn_apply`` returning every layer (same traced program
+    modulo dead-code elimination — see ``gnn_apply_layers``)."""
+    edges = EdgeList(senders, receivers, mask, h.shape[-2])
+    return gnn_apply_layers(params, kind, h, edges)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _batched_gnn_capture(params, kind, stacked, senders, receivers, mask):
+    """``_batched_gnn_apply`` returning every layer ([B, V, F_l] each)."""
+    edges = EdgeList(senders, receivers, mask, stacked.shape[-2])
+    return jax.vmap(lambda h: gnn_apply_layers(params, kind, h, edges))(
+        stacked)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def _kernel_gnn_capture(params, kind, h, senders, receivers, mask,
+                        blocks, cols, cmask, *, interpret):
+    """``_kernel_gnn_apply`` returning every layer, single or stacked."""
+    v = h.shape[-2]
+    edges = EdgeList(senders, receivers, mask, v)
+    padded_v = blocks.shape[0] * blocks.shape[-1]
+
+    def spmm(src):
+        f = src.shape[-1]
+        pad = ((0, padded_v - v), (0, padded_feature_dim(f) - f))
+        if src.ndim == 3:
+            out = block_spmm_batched(
+                blocks, cols, cmask,
+                jnp.pad(src.astype(jnp.float32), ((0, 0),) + pad),
+                interpret=interpret)
+            return out[:, :v, :f]
+        out = block_spmm(blocks, cols, cmask,
+                         jnp.pad(src.astype(jnp.float32), pad),
+                         interpret=interpret)
+        return out[:v, :f]
+
+    n = len(params)
+    outs = []
+    for i, p in enumerate(params):
+        h = apply_layer_with_sum(kind, p, h, edges, spmm(h), last=i == n - 1)
+        outs.append(h)
+    return outs
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power of two >= max(n, lo): bounds the jit shape churn of the
+    per-layer frontier programs to O(log V) specializations."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _segment_frontier_operands(graph, rows: np.ndarray):
+    """Static-shape operands for one layer's sub-edge recompute.
+
+    ``rows`` are the layer's dirty vertices. The row list is padded to a
+    bucket with ``V`` — an out-of-bounds id the scatter-merge drops — and
+    the edges *into* dirty rows are extracted in original edge order
+    (the bit-identity of the per-row segment sums rests on that), with
+    receivers compacted to row positions. Padding edges carry mask 0 and
+    point at the last row slot, which the ``len(rows) + 1`` bucket floor
+    guarantees is a padding slot, so their +0.0 never touches a real row.
+    """
+    v = graph.num_vertices
+    rows = np.asarray(rows, np.int64)
+    r_pad = _bucket(len(rows) + 1)
+    rows_p = np.full(r_pad, v, np.int64)
+    rows_p[:len(rows)] = rows
+    comp = np.zeros(v, np.int64)
+    comp[rows] = np.arange(len(rows))
+    dirty = np.zeros(v, bool)
+    dirty[rows] = True
+    send = np.asarray(graph.senders, np.int64)
+    recv = np.asarray(graph.receivers, np.int64)
+    sel = np.flatnonzero(dirty[recv])
+    e_pad = _bucket(len(sel))
+    sub_s = np.zeros(e_pad, np.int32)
+    sub_r = np.full(e_pad, r_pad - 1, np.int32)
+    sub_m = np.zeros(e_pad, np.float32)
+    sub_s[:len(sel)] = send[sel]
+    sub_r[:len(sel)] = comp[recv[sel]]
+    sub_m[:len(sel)] = 1.0
+    return (jnp.asarray(rows_p), jnp.asarray(sub_s), jnp.asarray(sub_r),
+            jnp.asarray(sub_m))
+
+
+def _kernel_frontier_operands(graph, rows: np.ndarray, block: int):
+    """Row-block-granular operands for the Pallas frontier path.
+
+    The dirty rows are widened to whole 128-row blocks (the kernel's
+    launch unit); every row of a selected block is recomputed and merged
+    — bit-safe, since a clean row in a dirty block sees exactly its full
+    operands. The block list is padded to a bucket with block 0; padding
+    slots' row ids are set to ``V`` so their (duplicate) outputs drop at
+    the scatter. Degrees and the dense tail then ride the same sub-edge
+    machinery as the segment path, keyed by the widened row set.
+    """
+    v = graph.num_vertices
+    rows = np.asarray(rows, np.int64)
+    sel = np.unique(rows // block)
+    s_pad = _bucket(len(sel) + 1, lo=1)
+    sel_p = np.zeros(s_pad, np.int64)
+    sel_p[:len(sel)] = sel
+    rows_k = (sel_p[:, None] * block + np.arange(block)).reshape(-1)
+    rows_k[len(sel) * block:] = v          # padding blocks: all dropped
+    real = rows_k[rows_k < v]              # in-graph rows of real blocks
+    r_pad = rows_k.shape[0]
+    comp = np.zeros(v, np.int64)
+    comp[real] = np.flatnonzero(rows_k < v)
+    dirty = np.zeros(v, bool)
+    dirty[real] = True
+    send = np.asarray(graph.senders, np.int64)
+    recv = np.asarray(graph.receivers, np.int64)
+    e_sel = np.flatnonzero(dirty[recv])
+    e_pad = _bucket(len(e_sel))
+    sub_s = np.zeros(e_pad, np.int32)
+    sub_r = np.full(e_pad, r_pad - 1, np.int32)
+    sub_m = np.zeros(e_pad, np.float32)
+    sub_s[:len(e_sel)] = send[e_sel]
+    sub_r[:len(e_sel)] = comp[recv[e_sel]]
+    sub_m[:len(e_sel)] = 1.0
+    # rows_k[-1] is always a padding slot (s_pad >= len(sel) + 1), so the
+    # padded sub-edges above never land on a real row.
+    return (jnp.asarray(rows_k), jnp.asarray(sub_s), jnp.asarray(sub_r),
+            jnp.asarray(sub_m), jnp.asarray(sel_p))
+
+
+def _segment_frontier_tail(p, kind, h_full, cached_out, rows, sub_s, sub_r,
+                           sub_m, last):
+    """One incremental layer: sub-edge segment aggregation over the dirty
+    rows, the shared dense tail on the gathered rows, scatter-merge into
+    the cached table. Out-of-range row ids (padding) clamp on gather and
+    drop on scatter."""
+    edges = EdgeList(sub_s, sub_r, sub_m, rows.shape[0])
+    a = aggregate_sum(h_full, edges)
+    out = apply_layer_with_sum(kind, p, h_full[rows], edges, a, last=last)
+    return cached_out.at[rows].set(out, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "last"))
+def _segment_frontier_layer(p, kind, h_full, cached_out, rows, sub_s,
+                            sub_r, sub_m, *, last):
+    return _segment_frontier_tail(p, kind, h_full, cached_out, rows,
+                                  sub_s, sub_r, sub_m, last)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "last"))
+def _segment_frontier_layer_many(p, kind, h_stack, cached_out, rows, sub_s,
+                                 sub_r, sub_m, *, last):
+    """vmap of the incremental layer over a stacked micro-batch sharing
+    one (unioned) frontier; the cached table broadcasts."""
+    return jax.vmap(lambda hf: _segment_frontier_tail(
+        p, kind, hf, cached_out, rows, sub_s, sub_r, sub_m, last))(h_stack)
+
+
+def _kernel_frontier_sum(h_full, sel, blocks, cols, cmask, interpret):
+    """Neighbor sums for the selected row blocks: ``block_spmm`` over the
+    gathered tile subset — bit-identical to the corresponding row slice
+    of the full launch (same per-(row-block, f-tile) accumulation)."""
+    v, f = h_full.shape[-2:]
+    block = blocks.shape[-1]
+    padded_v = blocks.shape[0] * block
+    pad = ((0, padded_v - v), (0, padded_feature_dim(f) - f))
+    sub = (blocks[sel], cols[sel], cmask[sel])
+    if h_full.ndim == 3:
+        out = block_spmm_batched(
+            *sub, jnp.pad(h_full.astype(jnp.float32), ((0, 0),) + pad),
+            interpret=interpret)
+        return out[..., :f]
+    out = block_spmm(*sub, jnp.pad(h_full.astype(jnp.float32), pad),
+                     interpret=interpret)
+    return out[:, :f]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "last", "interpret"))
+def _kernel_frontier_layer(p, kind, h_full, cached_out, rows, sub_s, sub_r,
+                           sub_m, sel, blocks, cols, cmask, *, last,
+                           interpret):
+    a = _kernel_frontier_sum(h_full, sel, blocks, cols, cmask, interpret)
+    edges = EdgeList(sub_s, sub_r, sub_m, rows.shape[0])
+    out = apply_layer_with_sum(kind, p, h_full[rows], edges, a, last=last)
+    return cached_out.at[rows].set(out, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "last", "interpret"))
+def _kernel_frontier_layer_many(p, kind, h_stack, cached_out, rows, sub_s,
+                                sub_r, sub_m, sel, blocks, cols, cmask, *,
+                                last, interpret):
+    a = _kernel_frontier_sum(h_stack, sel, blocks, cols, cmask, interpret)
+    edges = EdgeList(sub_s, sub_r, sub_m, rows.shape[0])
+    out = apply_layer_with_sum(kind, p, h_stack[:, rows], edges, a,
+                               last=last)
+    return jax.vmap(lambda o: cached_out.at[rows].set(o, mode="drop"))(out)
+
+
 class _SingleProgram(ExecutorBackend):
     def _apply(self, plan, h: jnp.ndarray,
                aggregation: str) -> jnp.ndarray:
@@ -222,6 +457,67 @@ class _SingleProgram(ExecutorBackend):
                                     exchange, aggregation=aggregation)
         out = self._apply(plan, jnp.asarray(stacked), aggregation)
         return [np.asarray(o) for o in out]
+
+    def supports_frontier(self, plan, aggregation):
+        return plan.model.kind in FRONTIER_KINDS
+
+    def run_layers(self, plan, feats, assignment, pg, exchange,
+                   aggregation="segment_sum"):
+        h = jnp.asarray(feats, jnp.float32)
+        mode = bsp.resolve_aggregation(aggregation, plan.model.kind)
+        params = list(plan.model.params)
+        edges = EdgeList.from_graph(plan.graph)
+        if mode == "pallas":
+            csr = ops.block_csr_for(plan.graph)
+            outs = _kernel_gnn_capture(
+                params, plan.model.kind, h, edges.senders, edges.receivers,
+                edges.mask, csr.blocks, csr.cols, csr.mask,
+                interpret=jax.default_backend() != "tpu")
+        elif h.ndim == 3:
+            outs = _batched_gnn_capture(params, plan.model.kind, h,
+                                        edges.senders, edges.receivers,
+                                        edges.mask)
+        else:
+            outs = _jit_gnn_capture(params, plan.model.kind, h,
+                                    edges.senders, edges.receivers,
+                                    edges.mask)
+        return [np.asarray(o) for o in outs]
+
+    def run_frontier(self, plan, feats, assignment, pg, exchange,
+                     aggregation, rows_per_layer, cached_layers):
+        mode = bsp.resolve_aggregation(aggregation, plan.model.kind)
+        kind = plan.model.kind
+        params = list(plan.model.params)
+        g = plan.graph
+        h = jnp.asarray(feats, jnp.float32)
+        stacked = h.ndim == 3
+        csr = ops.block_csr_for(g) if mode == "pallas" else None
+        interp = jax.default_backend() != "tpu"
+        n = len(params)
+        merged = []
+        for i, p in enumerate(params):
+            cached = jnp.asarray(cached_layers[i], jnp.float32)
+            last = i == n - 1
+            if mode == "pallas":
+                rows, sub_s, sub_r, sub_m, sel = _kernel_frontier_operands(
+                    g, rows_per_layer[i], int(csr.blocks.shape[-1]))
+                fl = (_kernel_frontier_layer_many if stacked
+                      else _kernel_frontier_layer)
+                h = fl(p, kind, h, cached, rows, sub_s, sub_r, sub_m, sel,
+                       csr.blocks, csr.cols, csr.mask, last=last,
+                       interpret=interp)
+            else:
+                rows, sub_s, sub_r, sub_m = _segment_frontier_operands(
+                    g, rows_per_layer[i])
+                fl = (_segment_frontier_layer_many if stacked
+                      else _segment_frontier_layer)
+                h = fl(p, kind, h, cached, rows, sub_s, sub_r, sub_m,
+                       last=last)
+            merged.append(np.asarray(h))
+        emb = merged[-1]
+        if stacked:
+            return [e for e in emb], merged
+        return emb, merged
 
 
 class _MeshBsp(ExecutorBackend):
@@ -277,6 +573,44 @@ class _MeshBsp(ExecutorBackend):
             exchange=exchange, aggregation=aggregation,
             halo_quant=self._halo_quant(plan, exchange, aggregation))
         return [np.asarray(o) for o in out]
+
+    #: mesh numerics (per-shard layouts, halo accumulation order) differ
+    #: from the single program's in the last float bits, so cached layers
+    #: are tagged with a distinct family and never cross-merged.
+    frontier_family = "mesh"
+
+    def supports_frontier(self, plan, aggregation):
+        return plan.model.kind in FRONTIER_KINDS
+
+    def run_layers(self, plan, feats, assignment, pg, exchange,
+                   aggregation="segment_sum"):
+        feats = np.asarray(feats, np.float32)
+        hq = self._halo_quant(plan, exchange, aggregation)
+        if feats.ndim == 3:
+            return bsp.bsp_infer_capture_many(
+                list(plan.model.params), plan.model.kind, feats, pg,
+                exchange=exchange, aggregation=aggregation, halo_quant=hq)
+        g = dataclasses.replace(plan.graph, features=feats)
+        return bsp.bsp_infer_capture(
+            list(plan.model.params), plan.model.kind, g, assignment,
+            exchange=exchange, aggregation=aggregation, halo_quant=hq,
+            pg=pg)
+
+    def run_frontier(self, plan, feats, assignment, pg, exchange,
+                     aggregation, rows_per_layer, cached_layers):
+        feats = np.asarray(feats, np.float32)
+        hq = self._halo_quant(plan, exchange, aggregation)
+        if feats.ndim == 3:
+            merged = bsp.bsp_infer_frontier_many(
+                list(plan.model.params), plan.model.kind, feats, pg,
+                rows_per_layer, cached_layers, exchange=exchange,
+                aggregation=aggregation, halo_quant=hq)
+            return [e for e in merged[-1]], merged
+        merged = bsp.bsp_infer_frontier(
+            list(plan.model.params), plan.model.kind, feats, pg,
+            rows_per_layer, cached_layers, exchange=exchange,
+            aggregation=aggregation, halo_quant=hq)
+        return merged[-1], merged
 
 
 EXECUTORS.register("sim", _SingleProgram("sim", "multi"))

@@ -626,16 +626,14 @@ class Server:
         if self.batch_controller is not None:
             self.batch_controller.observe(b, c_t + e_t)
         # Numerics: per-request compressor round-trip, then ONE stacked
-        # [B, V, F] array handed to the executor's natively batched
-        # run_many (bit-identical to serial Session.query — asserted in
-        # tests/test_server.py and tests/test_batched_exec.py).
+        # [B, V, F] array handed to the session's batched execute
+        # (bit-identical to serial Session.query — asserted in
+        # tests/test_server.py and tests/test_batched_exec.py). Routing
+        # through the session lets a cache-enabled session serve the
+        # whole micro-batch with one stacked dirty-frontier pass.
         collected = np.stack([np.asarray(sess.collect(r.features),
                                          np.float32) for r in batch])
-        embs = backend.run_many(sess.plan, collected,
-                                sess.state.placement.assignment,
-                                sess.partitioned(backend),
-                                sess._exchange.name,
-                                aggregation=sess._aggregation)
+        embs = sess.execute_many(collected, executor=backend)
         xbytes = sess.exchange_bytes(backend)
         batch_index = self.num_batches
         self.num_batches += 1

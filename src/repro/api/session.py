@@ -33,9 +33,11 @@ from repro.api.executors import ExecutorBackend
 from repro.api.registry import (COMPRESSORS, EXCHANGES, EXECUTORS,
                                 PARTITIONERS)
 from repro.api.updates import GraphDelta, UpdateReport
+from repro.core import frontier as _frontier
 from repro.core import simulation
 from repro.core.scheduler import SchedulerState, schedule_step
 from repro.gnn.graph import Graph
+from repro.kernels import ops
 from repro.runtime import bsp
 
 
@@ -74,6 +76,17 @@ class Session:
     truncated layer stack. These are the knobs the SLO control plane's
     degradation ladder turns (``repro.api.slo``); a session configured
     with them directly is bit-identical to the server's degraded path.
+
+    ``activation_cache=True`` turns on incremental delta-driven queries:
+    the session retains every layer's activations from the last full
+    pass, and a query after a (localized) graph update recomputes only
+    the k-hop dirty frontier (``core.frontier``), scatter-merging the
+    recomputed rows into the cached tables — bit-identical to a full
+    recompute, at O(affected) instead of O(V) executor work. Queries
+    fall back to a full pass (transparently, repriming the cache) when
+    the frontier exceeds ``frontier_max_fraction`` of V, the executor /
+    model kind lacks frontier support (GAT re-weights edges per layer),
+    or the cached revision/numerics tags disagree.
     """
 
     def __init__(self, plan, *, executor: Optional[str] = None,
@@ -84,7 +97,9 @@ class Session:
                  adapt_every: int = 0,
                  accuracy_fn: Optional[Callable[[np.ndarray], float]] = None,
                  seed: Optional[int] = None,
-                 updates: str = "sync"):
+                 updates: str = "sync",
+                 activation_cache: bool = False,
+                 frontier_max_fraction: float = 0.25):
         if updates not in ("sync", "deferred"):
             raise ValueError(f"updates must be 'sync' or 'deferred', "
                              f"got {updates!r}")
@@ -136,6 +151,11 @@ class Session:
             for f in plan.fogs]
         self.num_queries = 0
         self._partitioned = plan.partitioned  # valid for the initial layout
+        self._acache = (_frontier.ActivationCache(frontier_max_fraction)
+                        if activation_cache else None)
+        #: QueryFrontier of the last query when it took the incremental
+        #: path, else None (introspection for tests and benchmarks).
+        self.last_frontier: Optional[_frontier.QueryFrontier] = None
         self._executor.check(plan)
 
     # -- runtime ------------------------------------------------------------
@@ -194,11 +214,112 @@ class Session:
         return self._compressor.roundtrip(raw, g.degrees)
 
     def execute(self, feats: np.ndarray, *, executor=None) -> np.ndarray:
-        """Stage 2 (paper step 4): distributed runtime (real numerics)."""
+        """Stage 2 (paper step 4): distributed runtime (real numerics).
+
+        With ``activation_cache=True`` this is where the incremental path
+        lives: the collected ``feats`` are diffed bitwise against the
+        cached h^0, the dirty frontier is expanded, and the executor
+        recomputes only the dirty rows — or runs a full capturing pass
+        when the cache cannot serve (always bit-identical either way).
+        """
         backend = self.resolve_executor(executor)
+        if self._acache is not None:
+            return self._cached_execute(np.asarray(feats, np.float32),
+                                        backend)
         return backend.run(self.plan, feats, self.state.placement.assignment,
                            self.partitioned(backend), self._exchange.name,
                            aggregation=self._aggregation)
+
+    def execute_many(self, feats, *, executor=None) -> list:
+        """Batched stage 2 over a micro-batch ([B, V, F] stack or a
+        sequence of [V, F] arrays) -> list of [V, D] embeddings.
+
+        The Server's micro-batcher calls this instead of the backend's
+        ``run_many`` directly so a cache-enabled session can serve the
+        whole batch through ONE stacked frontier pass (the per-example
+        h^0 diffs union into one dirty set; every member stays
+        bit-identical to its serial ``execute``).
+        """
+        backend = self.resolve_executor(executor)
+        if not (isinstance(feats, np.ndarray) and feats.ndim == 3):
+            feats = np.stack([np.asarray(f, np.float32) for f in feats])
+        feats = np.asarray(feats, np.float32)
+        if self._acache is None:
+            return backend.run_many(
+                self.plan, feats, self.state.placement.assignment,
+                self.partitioned(backend), self._exchange.name,
+                aggregation=self._aggregation)
+        if feats.shape[0] == 1:
+            return [self._cached_execute(feats[0], backend)]
+        return self._cached_execute(feats, backend)
+
+    def _cached_execute(self, feats: np.ndarray, backend: ExecutorBackend):
+        """Serve one execute through the activation cache.
+
+        ``feats`` is [V, F] (returns [V, D]) or a stacked [B, V, F]
+        micro-batch (returns a list of B [V, D] arrays). Decision order:
+        tag agreement (graph revision + aggregation mode + executor
+        family) -> h^0 diff + frontier expansion -> empty-frontier fast
+        path / budgeted incremental pass / full capturing pass.
+        """
+        cache = self._acache
+        plan = self.plan
+        g: Graph = plan.graph
+        k = plan.model.num_layers
+        assign = self.state.placement.assignment
+        pg = self.partitioned(backend)
+        exch = self._exchange.name
+        agg = self._aggregation
+        stacked = feats.ndim == 3
+        mode = bsp.resolve_aggregation(
+            agg, plan.model.kind,
+            exchange=exch if getattr(backend, "needs_block_shards", False)
+            else None)
+        family = getattr(backend, "frontier_family", "single")
+        revision = ops.graph_fingerprint(g)
+        self.last_frontier = None
+        if cache.matches(revision, mode, family):
+            qf = cache.plan_query(feats, g, k)
+            if qf is not None and not len(qf.rows):
+                # Nothing changed since the cached pass: serve the cached
+                # final layer outright (sound for every kind, GAT too).
+                if stacked:
+                    return [np.array(cache.layers[-1], copy=True)
+                            for _ in range(feats.shape[0])]
+                return np.array(cache.layers[-1], copy=True)
+            if (qf is not None
+                    and backend.supports_frontier(plan, agg)
+                    and (mode != "pallas" or cache.pallas_ok)):
+                emb, merged = backend.run_frontier(
+                    plan, feats, assign, pg, exch, agg, qf.rows,
+                    cache.layers)
+                # A stacked pass merges the LAST example's tables: its
+                # h^0 becomes the diff baseline, and any member-specific
+                # rows self-correct through the next query's diff.
+                if stacked:
+                    cache.merge(feats[-1], [m[-1] for m in merged])
+                else:
+                    cache.merge(feats, merged)
+                self.last_frontier = qf
+                return emb
+        # Full pass, capturing every layer to (re)base the cache.
+        try:
+            layers = backend.run_layers(plan, feats, assign, pg, exch,
+                                        aggregation=agg)
+        except NotImplementedError:
+            # Backend cannot capture: serve plainly, cache stays cold.
+            cache.clear()
+            if stacked:
+                return backend.run_many(plan, feats, assign, pg, exch,
+                                        aggregation=agg)
+            return backend.run(plan, feats, assign, pg, exch,
+                               aggregation=agg)
+        if stacked:
+            cache.populate(feats[-1], [a[-1] for a in layers],
+                           revision, mode, family)
+            return [np.asarray(e) for e in layers[-1]]
+        cache.populate(feats, layers, revision, mode, family)
+        return np.asarray(layers[-1])
 
     def account(self, executor=None, *,
                 batch_size: int = 1) -> simulation.ServingResult:
@@ -342,6 +463,7 @@ class Session:
             return None
         from repro.api.engine import Engine   # lazy: avoid import cycle
         deltas, self._pending_deltas = self._pending_deltas, []
+        old_graph = self.plan.graph
         try:
             plan2 = Engine.from_plan(self.plan).apply_delta(
                 self.plan, deltas,
@@ -351,6 +473,21 @@ class Session:
             # dropped without losing its neighbours.
             self._pending_deltas = deltas + self._pending_deltas
             raise
+        if self._acache is not None and self._acache.primed:
+            # Remap the cached activations through the coalesced repair's
+            # order-preserving compaction and record the dirty seeds; any
+            # disagreement with the repaired plan drops the cache instead
+            # of risking a stale serve.
+            try:
+                fu = _frontier.fold_delta_frontier(old_graph, deltas)
+            except Exception:
+                self._acache.clear()
+            else:
+                rev = ops.graph_fingerprint(plan2.graph)
+                if ops.graph_fingerprint(fu.graph) == rev:
+                    self._acache.apply_update(fu, revision=rev)
+                else:
+                    self._acache.clear()
         self.plan = plan2
         self.state.placement = dataclasses.replace(
             plan2.placement,
@@ -382,4 +519,19 @@ class Session:
             replan_partitioner=PARTITIONERS.resolve(plan.config.partitioner))
         if not np.array_equal(before, self.state.placement.assignment):
             self._partitioned = None  # layout changed: invalidate buffers
+            if self._acache is not None and self._acache.family == "mesh":
+                # Mesh-family cached tables were produced under the old
+                # partition's halo layout; single-program numerics are
+                # assignment-independent so those caches survive.
+                self._acache.clear()
         return self.state.mode_history[-1]
+
+    # -- frontier introspection ---------------------------------------------
+
+    def frontier_state(self) -> Optional["_frontier.FrontierPlan"]:
+        """Snapshot of the pending dirty frontier for ``repro.analysis``
+        (None when the session has no activation cache or a cold one)."""
+        if self._acache is None:
+            return None
+        return self._acache.frontier_plan(self.plan.graph,
+                                          self.plan.model.num_layers)

@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -287,6 +288,13 @@ def load_bench_curve(path: Optional[str] = None, *, executor: str = "sim",
     ``BENCH_serving.json`` sweep: batch size -> whole-batch seconds
     (``batched_s``), averaged over matching rows. Returns ``{}`` when the
     file is missing or malformed — the controller then starts cold.
+
+    When the file has rows but none match the requested (executor,
+    aggregation) pair, a :class:`RuntimeWarning` is emitted and the
+    closest available pair is used instead — same executor first, then
+    same aggregation, then any — so a controller asked for an unswept
+    combination is seeded with a related curve rather than silently
+    starting cold.
     """
     if path is None:
         here = os.path.abspath(__file__)
@@ -299,17 +307,29 @@ def load_bench_curve(path: Optional[str] = None, *, executor: str = "sim",
         rows = payload["rows"]
     except (OSError, ValueError, KeyError, TypeError):
         return {}
-    curve: Dict[int, list] = {}
+    by_pair: Dict[Tuple[str, str], Dict[int, list]] = {}
     for row in rows:
         try:
-            if row.get("executor") != executor:
-                continue
-            if row.get("aggregation") != aggregation:
-                continue
-            curve.setdefault(int(row["batch"]), []).append(
-                float(row["batched_s"]))
+            pair = (str(row["executor"]), str(row["aggregation"]))
+            by_pair.setdefault(pair, {}).setdefault(
+                int(row["batch"]), []).append(float(row["batched_s"]))
         except (ValueError, KeyError, TypeError):
             continue
+    if not by_pair:
+        return {}
+    want = (executor, aggregation)
+    if want not in by_pair:
+        fallback = (
+            [p for p in sorted(by_pair) if p[0] == executor]
+            or [p for p in sorted(by_pair) if p[1] == aggregation]
+            or sorted(by_pair))[0]
+        warnings.warn(
+            f"load_bench_curve: no rows for executor={executor!r} "
+            f"aggregation={aggregation!r} in {path}; falling back to "
+            f"executor={fallback[0]!r} aggregation={fallback[1]!r}",
+            RuntimeWarning, stacklevel=2)
+        want = fallback
+    curve = by_pair[want]
     return {b: float(np.mean(v)) for b, v in curve.items() if v}
 
 

@@ -23,13 +23,20 @@ def gnn_init(key, kind: str, dims: Sequence[int]) -> List[dict]:
     return [init_fn(k, dims[i], dims[i + 1]) for i, k in enumerate(keys)]
 
 
-def gnn_apply(params: List[dict], kind: str, h: jnp.ndarray, edges: EdgeList,
-              *, aggregate=None) -> jnp.ndarray:
-    """K-layer forward; last layer has no activation (logits)."""
+def gnn_apply_layers(params: List[dict], kind: str, h: jnp.ndarray,
+                     edges: EdgeList, *, aggregate=None) -> List[jnp.ndarray]:
+    """K-layer forward returning every layer's output, h^1 .. h^K.
+
+    The per-layer op sequence is the single source of truth for
+    ``gnn_apply`` (which returns only h^K), so capturing intermediates —
+    what the activation-cache path does to seed incremental recompute —
+    traces the exact same program modulo dead-code elimination and stays
+    bit-identical to the plain forward.
+    """
     _, layer_fn = LAYER_FNS[kind]
     n = len(params)
+    outs = []
     for i, p in enumerate(params):
-        act = None if i == n - 1 else None
         kwargs = {}
         if aggregate is not None and kind in ("gcn", "sage"):
             kwargs["aggregate"] = aggregate
@@ -37,7 +44,14 @@ def gnn_apply(params: List[dict], kind: str, h: jnp.ndarray, edges: EdgeList,
             h = layer_fn(p, h, edges, activation=None, **kwargs)
         else:
             h = layer_fn(p, h, edges, **kwargs)
-    return h
+        outs.append(h)
+    return outs
+
+
+def gnn_apply(params: List[dict], kind: str, h: jnp.ndarray, edges: EdgeList,
+              *, aggregate=None) -> jnp.ndarray:
+    """K-layer forward; last layer has no activation (logits)."""
+    return gnn_apply_layers(params, kind, h, edges, aggregate=aggregate)[-1]
 
 
 def num_layers(params) -> int:

@@ -784,6 +784,361 @@ def bsp_apply_many(params, kind: str, pg: PartitionedGraph,
     return fn(list(params), *operands)
 
 
+def _bsp_apply_layers(params, kind: str, pg: PartitionedGraph, feats_op,
+                      mesh: Mesh, axis: str = "fog", exchange: str = "halo",
+                      aggregation: str = "segment_sum",
+                      halo_quant: bool = False, many: bool = False,
+                      dirty=None, cached=None):
+    """Capture / frontier variants of ``bsp_apply`` / ``bsp_apply_many``.
+
+    Runs the same per-layer BSP step as the plain programs but returns a
+    tuple of EVERY layer's [n, (B,) P, F_l] activations (the last entry is
+    the plain program's output, bit for bit — same op sequence modulo dead
+    code).  With ``dirty`` / ``cached`` it becomes the frontier-restricted
+    shard apply: ``dirty`` is a [n, K, P] per-layer dirty-row mask,
+    ``cached`` a list of K [n, P, F_l] activation tables from the last
+    full pass, and each layer
+
+      * segment path: masks edges to dirty receivers (``em * dirty[rc]``)
+        — a dirty row keeps its FULL incoming edge subsequence, so its
+        segment sums and masked degree accumulate in the full pass's
+        order;
+      * kernel path: zeroes the tile masks of clean 128-row blocks so the
+        Pallas SpMM only accumulates dirty row-blocks (the edge mask
+        stays full: degrees must be exact), and merges at row-block
+        granularity — every row of a live block sees its full tile set,
+        so its value equals the full pass's;
+
+    then scatter-merges recomputed rows into the cached table with
+    ``jnp.where`` (an elementwise select: clean rows keep the cached
+    bits, including -0.0 signs, which an arithmetic blend would flip).
+    The next layer's halo exchange reads the MERGED table, so the result
+    is bit-identical to a from-scratch pass by induction — provided the
+    dirty mask is a sound k-hop closure (``core.frontier``) and the
+    cached tables came from this graph revision (the Session's
+    ``ActivationCache`` tags enforce both).
+    """
+    _, layer_fn = LAYER_FNS[kind]
+    mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+    use_kernels = mode == "pallas"
+    frontier = dirty is not None
+    if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
+        raise ValueError(
+            "aggregation='pallas' needs the block-CSR shards; rebuild the "
+            "PartitionedGraph with build_partitioned(..., build_blocks=True)")
+    if halo_quant and not use_kernels:
+        raise ValueError("halo_quant requires the 'pallas' aggregation path")
+    if frontier and kind not in KERNEL_KINDS:
+        raise ValueError(
+            f"frontier execution supports kinds {KERNEL_KINDS} (static-sum "
+            f"aggregation); {kind!r} re-weights edges per layer")
+    interpret = jax.default_backend() != "tpu"
+    # Bind layout statics to locals (never close over pg — see bsp_apply).
+    slots = pg.slots
+    local_rows = None if pg.local_csr is None else pg.local_csr.src_rows
+    halo_rows = None if pg.halo_csr is None else pg.halo_csr.src_rows
+    out_rows = None if pg.local_csr is None else pg.local_csr.out_rows
+
+    def shard_fn(params, *ops):
+        feats, vmask, s_g, s_h, recv, emask = ops[:6]
+        brows, bmask, self_g, self_h = ops[6:10]
+        rest = ops[10:]
+        dm = cch = None
+        if frontier:
+            dm = rest[0][0]                    # [K, P]
+            cch = [c[0] for c in rest[1]]      # K tables [P, F_l]
+            rest = rest[2:]
+        if use_kernels:
+            lblk, lcol, lmsk, hblk, hcol, hmsk = (a[0] for a in rest)
+        nlayers = len(params)
+        h = feats[0]                           # [P, F] or [B, P, F]
+        vm, sg, sh = vmask[0], s_g[0], s_h[0]
+        rc, em = recv[0], emask[0]
+        br, bm = brows[0], bmask[0]
+        selg, selh = self_g[0], self_h[0]
+        outs = []
+        for li, p in enumerate(params):
+            act_last = li == nlayers - 1
+            kwargs = {}
+            em_l = em
+            lmsk_l = hmsk_l = merge_row = None
+            if use_kernels:
+                lmsk_l, hmsk_l = lmsk, hmsk
+            if frontier:
+                drow = dm[li]                  # [P]
+                if use_kernels:
+                    dblk = jnp.pad(drow, (0, out_rows - slots)) \
+                        .reshape(-1, BLOCK).max(axis=1)
+                    lmsk_l = lmsk * dblk[:, None]
+                    hmsk_l = hmsk * dblk[:, None]
+                    merge_row = jnp.repeat(dblk, BLOCK)[:slots]
+                else:
+                    em_l = em * drow[rc]
+                    merge_row = drow
+            if exchange == "allgather":
+                h_all = jax.lax.all_gather(h, axis)
+                h_src = (_gathered_stack(h_all) if many
+                         else h_all.reshape(-1, h.shape[-1]))
+                edges = _layer_edges(slots, sg, kind, selg, rc, em_l, vm)
+            elif exchange == "halo":
+                hb = (h[:, br] if many else h[br]) * bm[:, None]
+                edges = _layer_edges(slots, sh, kind, selh, rc, em_l, vm)
+                if use_kernels:
+                    f = h.shape[-1]
+                    h_src = None
+                    if halo_quant:
+                        codes, sc, mn = _wire_quantize(hb)
+                        if many:
+                            codes = _gathered_stack(
+                                jax.lax.all_gather(codes, axis))
+                            sm = _gathered_stack(jax.lax.all_gather(
+                                jnp.stack([sc, mn], axis=-1), axis))
+                            codes = _kernel_pad(codes, halo_rows)
+                            sm = jnp.pad(sm, ((0, 0),
+                                              (0, halo_rows - sm.shape[1]),
+                                              (0, 0)))
+                            sc, mn = sm[..., 0], sm[..., 1]
+
+                            def halo_agg(_f=f, _m=hmsk_l, _c=codes,
+                                         _s=sc, _n=mn):
+                                return dequant_spmm_batched(
+                                    hblk, hcol, _m, _c, _s, _n,
+                                    interpret=interpret)[:, :slots, :_f]
+                        else:
+                            codes = jax.lax.all_gather(
+                                codes, axis).reshape(-1, f)
+                            sm = jax.lax.all_gather(
+                                jnp.stack([sc, mn], axis=-1),
+                                axis).reshape(-1, 2)
+                            codes = _kernel_pad(codes, halo_rows)
+                            sm = jnp.pad(sm, ((0, halo_rows - sm.shape[0]),
+                                              (0, 0)))
+                            sc, mn = sm[:, 0], sm[:, 1]
+
+                            def halo_agg(_f=f, _m=hmsk_l, _c=codes,
+                                         _s=sc, _n=mn):
+                                return dequant_spmm(
+                                    hblk, hcol, _m, _c, _s, _n,
+                                    interpret=interpret)[:slots, :_f]
+                    else:
+                        if many:
+                            halo = _gathered_stack(
+                                jax.lax.all_gather(hb, axis))
+                            halo = _kernel_pad(halo, halo_rows)
+
+                            def halo_agg(_f=f, _m=hmsk_l, _h=halo):
+                                return block_spmm_batched(
+                                    hblk, hcol, _m, _h,
+                                    interpret=interpret)[:, :slots, :_f]
+                        else:
+                            halo = jax.lax.all_gather(
+                                hb, axis).reshape(-1, h.shape[-1])
+                            halo = _kernel_pad(halo, halo_rows)
+
+                            def halo_agg(_f=f, _m=hmsk_l, _h=halo):
+                                return block_spmm(
+                                    hblk, hcol, _m, _h,
+                                    interpret=interpret)[:slots, :_f]
+                    if many:
+                        def kernel_sum(h_loc, _f=f, _m=lmsk_l,
+                                       _halo_agg=halo_agg):
+                            loc = _kernel_pad(h_loc, local_rows)
+                            out = block_spmm_batched(lblk, lcol, _m, loc,
+                                                     interpret=interpret)
+                            return out[:, :slots, :_f] + _halo_agg()
+                    else:
+                        def kernel_sum(h_loc, edges_, h_src_=None, _f=f,
+                                       _m=lmsk_l, _halo_agg=halo_agg):
+                            loc = _kernel_pad(h_loc, local_rows)
+                            out = block_spmm(lblk, lcol, _m, loc,
+                                             interpret=interpret)
+                            return out[:slots, :_f] + _halo_agg()
+                else:
+                    halo = jax.lax.all_gather(hb, axis)
+                    if many:
+                        h_src = jnp.concatenate(
+                            [h, _gathered_stack(halo)], axis=1)
+                    else:
+                        h_src = jnp.concatenate(
+                            [h, halo.reshape(-1, h.shape[-1])], axis=0)
+            else:
+                raise ValueError(exchange)
+            if use_kernels and not many:
+                if kind == "sage":
+                    def kernel_agg(h_loc, edges_, h_src_=None,
+                                   _sum=kernel_sum):
+                        deg = masked_degree(edges_)
+                        return (_sum(h_loc, edges_, h_src_)
+                                / jnp.maximum(deg, 1.0)[:, None])
+                else:
+                    kernel_agg = kernel_sum
+                kwargs["aggregate"] = kernel_agg
+            if many:
+                if act_last:
+                    kwargs["activation"] = None
+                if use_kernels:
+                    h_new = apply_layer_with_sum(kind, p, h, edges,
+                                                 kernel_sum(h),
+                                                 last=act_last)
+                else:
+                    h_new = jax.vmap(
+                        lambda hh, ss, _p=p, _kw=kwargs: layer_fn(
+                            _p, hh, edges, h_src=ss, **_kw))(h, h_src)
+            elif act_last:
+                h_new = layer_fn(p, h, edges, activation=None, h_src=h_src,
+                                 **kwargs)
+            else:
+                h_new = layer_fn(p, h, edges, h_src=h_src, **kwargs)
+            h_new = h_new * vm[:, None]
+            if frontier:
+                h = jnp.where(merge_row[:, None] > 0, h_new, cch[li])
+            else:
+                h = h_new
+            outs.append(h[None])
+        return tuple(outs)
+
+    spec = P(axis, None, None, None) if many else P(axis, None, None)
+    spec2 = P(axis, None)
+    spec3 = P(axis, None, None)
+    in_specs = [P(), spec, spec2, spec2, spec2, spec2, spec2, spec2, spec2,
+                spec2, spec2]
+    operands = [jnp.asarray(feats_op), jnp.asarray(pg.vertex_mask),
+                jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
+                jnp.asarray(pg.receivers_local), jnp.asarray(pg.edge_mask),
+                jnp.asarray(pg.boundary_rows), jnp.asarray(pg.boundary_mask),
+                jnp.asarray(pg.self_senders_global),
+                jnp.asarray(pg.self_senders_halo)]
+    if frontier:
+        # The dirty masks ride as ONE [n, K, P] operand; the cached tables
+        # as a list operand under a pytree-prefix spec (variable K / F_l
+        # re-specialize jit under the same cached shard_map wrapper).
+        operands.append(jnp.asarray(dirty, jnp.float32))
+        in_specs.append(spec3)
+        operands.append([jnp.asarray(c, jnp.float32) for c in cached])
+        in_specs.append(spec3)
+    if use_kernels:
+        for csr in (pg.local_csr, pg.halo_csr):
+            for arr in (csr.blocks, csr.cols, csr.mask):
+                operands.append(jnp.asarray(arr))
+                in_specs.append(P(axis, *([None] * (arr.ndim - 1))))
+    smap_kw = {}
+    if use_kernels:
+        smap_kw["check_rep"] = False
+    tag = ("frontier" if frontier else "capture") + ("_many" if many else "")
+    fn = _cached_program(
+        _program_key(tag, kind, pg, mesh, axis, exchange, use_kernels,
+                     halo_quant, interpret),
+        lambda: jax.jit(_shard_map(shard_fn, mesh=mesh,
+                                   in_specs=tuple(in_specs),
+                                   out_specs=spec, **smap_kw)))
+    return fn(list(params), *operands)
+
+
+def _default_mesh(pg: PartitionedGraph, axis: str) -> Mesh:
+    devs = np.array(jax.devices()[:pg.n])
+    if len(devs) != pg.n:
+        raise ValueError(
+            f"need {pg.n} devices for {pg.n} partitions, have "
+            f"{len(jax.devices())} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={pg.n}")
+    return Mesh(devs, (axis,))
+
+
+def bsp_infer_capture(params, kind: str, g: Graph, assignment: np.ndarray,
+                      mesh: Optional[Mesh] = None, exchange: str = "halo",
+                      axis: str = "fog", aggregation: str = "segment_sum",
+                      halo_quant: bool = False,
+                      pg: Optional[PartitionedGraph] = None):
+    """``bsp_infer`` returning every layer: K arrays [V, F_l] in original
+    vertex order (the last is the plain ``bsp_infer`` output, bit for
+    bit). Feeds the Session's activation cache."""
+    if pg is None:
+        mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+        pg = build_partitioned(g, assignment, build_blocks=mode == "pallas")
+    else:
+        pg = pg.with_features(g.features)
+    if mesh is None:
+        mesh = _default_mesh(pg, axis)
+    outs = _bsp_apply_layers(params, kind, pg, pg.feats, mesh, axis,
+                             exchange, aggregation, halo_quant, many=False)
+    return [pg.unpermute(np.asarray(o)) for o in outs]
+
+
+def bsp_infer_capture_many(params, kind: str, feats: np.ndarray,
+                           pg: PartitionedGraph,
+                           mesh: Optional[Mesh] = None,
+                           exchange: str = "halo", axis: str = "fog",
+                           aggregation: str = "segment_sum",
+                           halo_quant: bool = False):
+    """Batched capture: [B, V, F] micro-batch -> K arrays [B, V, F_l]."""
+    stack = pg.feature_stack(np.asarray(feats, np.float32))
+    if mesh is None:
+        mesh = _default_mesh(pg, axis)
+    outs = _bsp_apply_layers(params, kind, pg, stack, mesh, axis, exchange,
+                             aggregation, halo_quant, many=True)
+    return [pg.unpermute_stack(np.asarray(o)) for o in outs]
+
+
+def _scatter_frontier(pg: PartitionedGraph, rows_per_layer, cached_layers):
+    """Global frontier/cache state -> per-partition shard operands.
+
+    Pure data movement through part_of/slot_of (no arithmetic), so the
+    shard tables carry exactly the cached bits."""
+    k = len(cached_layers)
+    dm = np.zeros((pg.n, k, pg.slots), np.float32)
+    for li, rows in enumerate(rows_per_layer):
+        rows = np.asarray(rows, np.int64)
+        dm[pg.part_of[rows], li, pg.slot_of[rows]] = 1.0
+    ct = []
+    for cl in cached_layers:
+        cl = np.asarray(cl, np.float32)
+        t = np.zeros((pg.n, pg.slots, cl.shape[-1]), np.float32)
+        t[pg.part_of, pg.slot_of] = cl
+        ct.append(t)
+    return dm, ct
+
+
+def bsp_infer_frontier(params, kind: str, feats: np.ndarray,
+                       pg: PartitionedGraph, rows_per_layer, cached_layers,
+                       mesh: Optional[Mesh] = None, exchange: str = "halo",
+                       axis: str = "fog", aggregation: str = "segment_sum",
+                       halo_quant: bool = False):
+    """Frontier-restricted distributed inference.
+
+    ``rows_per_layer[l]`` are the global vertex ids layer ``l`` must
+    recompute (a sound closure from ``core.frontier``), ``cached_layers``
+    the last full pass's K [V, F_l] tables for THIS graph revision.
+    Returns the K merged tables in original vertex order; the last one is
+    bit-identical to a full ``bsp_infer`` pass.
+    """
+    pg = pg.with_features(np.asarray(feats, np.float32))
+    dm, ct = _scatter_frontier(pg, rows_per_layer, cached_layers)
+    if mesh is None:
+        mesh = _default_mesh(pg, axis)
+    outs = _bsp_apply_layers(params, kind, pg, pg.feats, mesh, axis,
+                             exchange, aggregation, halo_quant, many=False,
+                             dirty=dm, cached=ct)
+    return [pg.unpermute(np.asarray(o)) for o in outs]
+
+
+def bsp_infer_frontier_many(params, kind: str, feats: np.ndarray,
+                            pg: PartitionedGraph, rows_per_layer,
+                            cached_layers, mesh: Optional[Mesh] = None,
+                            exchange: str = "halo", axis: str = "fog",
+                            aggregation: str = "segment_sum",
+                            halo_quant: bool = False):
+    """Batched frontier pass over a stacked [B, V, F] micro-batch sharing
+    one (unioned) dirty frontier; returns K merged [B, V, F_l] stacks."""
+    stack = pg.feature_stack(np.asarray(feats, np.float32))
+    dm, ct = _scatter_frontier(pg, rows_per_layer, cached_layers)
+    if mesh is None:
+        mesh = _default_mesh(pg, axis)
+    outs = _bsp_apply_layers(params, kind, pg, stack, mesh, axis, exchange,
+                             aggregation, halo_quant, many=True,
+                             dirty=dm, cached=ct)
+    return [pg.unpermute_stack(np.asarray(o)) for o in outs]
+
+
 def bsp_infer(params, kind: str, g: Graph, assignment: np.ndarray,
               mesh: Optional[Mesh] = None, exchange: str = "halo",
               axis: str = "fog", aggregation: str = "segment_sum",

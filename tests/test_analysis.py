@@ -433,3 +433,105 @@ def test_slo_rung_sessions_rebased_after_structural_update():
         assert rung_plan.graph.num_vertices == v + 2
         report = run_checks(rung_plan, families=("plan",))
         assert report.ok and not report.warnings, report.format()
+
+
+# ------------------------------------------------------- frontier family
+
+
+def _frontier_ctx():
+    """A session with a pending dirty frontier + its analysis context."""
+    from repro.api.updates import GraphDelta
+    from repro.gnn.graph import from_edge_list
+    rng = np.random.default_rng(11)
+    v = 40
+    g = from_edge_list(v, np.array([(i, i + 1) for i in range(v - 1)],
+                                   np.int64),
+                       rng.normal(size=(v, 4)).astype(np.float32))
+    params = models.gnn_init(jax.random.PRNGKey(11), "gcn",
+                             [g.feature_dim, 8, 4])
+    plan = Engine((params, "gcn"), "1A+2B", executor="sim",
+                  aggregation="segment_sum").compile(g)
+    sess = plan.session(activation_cache=True, frontier_max_fraction=1.0)
+    sess.query()
+    sess.update(GraphDelta(feature_ids=[3], feature_values=np.ones(
+        (1, g.feature_dim), np.float32)))
+    fp = sess.frontier_state()
+    assert fp is not None
+    return sess, AnalysisContext(plan=sess.plan, frontier=fp)
+
+
+def test_frontier_checks_silent_on_healthy_pending_delta():
+    _, ctx = _frontier_ctx()
+    report = run_checks(ctx, families=("frontier",))
+    assert report.ok and not report.warnings, report.format()
+    assert set(report.ran) == {"plan.frontier.closure",
+                               "plan.frontier.revision"}
+
+
+def test_frontier_checks_skip_without_frontier(mesh_plan):
+    # frontier-less contexts must skip (requires=) rather than crash
+    report = run_checks(AnalysisContext(plan=mesh_plan),
+                        families=("frontier",))
+    assert report.ok and not report.ran
+
+
+def test_truncated_rows_fire_frontier_closure():
+    import dataclasses
+    sess, ctx = _frontier_ctx()
+    fp = ctx.frontier
+    bad = dataclasses.replace(fp, rows=fp.rows[:-1])
+    report, diags = _errors_of(
+        AnalysisContext(plan=sess.plan, frontier=bad),
+        "plan.frontier.closure", families=("frontier",))
+    assert not report.ok
+    assert any(d.severity == "error" for d in diags), report.format()
+
+
+def test_undercovered_rows_fire_frontier_closure():
+    import dataclasses
+    sess, ctx = _frontier_ctx()
+    fp = ctx.frontier
+    # drop a dirty vertex from the last layer: closure under-coverage
+    assert len(fp.rows[-1]) > 1
+    bad = dataclasses.replace(fp, rows=fp.rows[:-1] + [fp.rows[-1][:-1]])
+    report, diags = _errors_of(
+        AnalysisContext(plan=sess.plan, frontier=bad),
+        "plan.frontier.closure", families=("frontier",))
+    assert not report.ok
+    assert any(d.severity == "error" for d in diags), report.format()
+
+
+def test_out_of_range_seed_fires_frontier_closure():
+    import dataclasses
+    sess, ctx = _frontier_ctx()
+    fp = ctx.frontier
+    bad = dataclasses.replace(
+        fp, seeds=np.concatenate([fp.seeds, [fp.num_vertices + 5]]))
+    report, diags = _errors_of(
+        AnalysisContext(plan=sess.plan, frontier=bad),
+        "plan.frontier.closure", families=("frontier",))
+    assert not report.ok
+    assert any(d.severity == "error" for d in diags), report.format()
+
+
+def test_stale_revision_fires_frontier_revision():
+    import dataclasses
+    sess, ctx = _frontier_ctx()
+    bad = dataclasses.replace(ctx.frontier, revision="deadbeef")
+    report, diags = _errors_of(
+        AnalysisContext(plan=sess.plan, frontier=bad),
+        "plan.frontier.revision", families=("frontier",))
+    assert not report.ok
+    assert any(d.severity == "error" for d in diags), report.format()
+
+
+def test_vertex_count_mismatch_fires_frontier_revision():
+    import dataclasses
+    sess, ctx = _frontier_ctx()
+    bad = dataclasses.replace(ctx.frontier,
+                              num_vertices=ctx.frontier.num_vertices + 1)
+    report, diags = _errors_of(
+        AnalysisContext(plan=sess.plan, frontier=bad),
+        "plan.frontier.revision", families=("frontier",))
+    assert not report.ok
+    assert any(d.severity == "error" for d in diags), report.format()

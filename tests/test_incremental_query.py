@@ -1,0 +1,415 @@
+"""Differential fuzz harness for incremental delta-driven inference.
+
+The contract under test: a ``Session(activation_cache=True)`` serving a
+stream of random ``GraphDelta``s answers every query **bit-identically**
+to a from-scratch ``Engine.compile`` + query on the same mutated graph —
+whether the cache served the empty-frontier fast path, an incremental
+k-hop dirty-frontier recompute, or a full capturing fallback.
+
+Three layers of defence:
+
+  * a seeded numpy case generator driving >=100 randomized cases across
+    sim/single/cloud x segment_sum/pallas x gcn/sage (runs everywhere);
+  * a hypothesis property over the same case runner (extra shrinking
+    power when the optional dep is installed — see _hypothesis_compat);
+  * a mesh-bsp subprocess spot-check (multi-device layouts are
+    assignment-dependent, so its reference is a cache-less session on
+    the same plan chain rather than a fresh compile).
+
+Plus frontier oracle tests (hand-computed k-hop balls incl. removed-edge
+invalidation) and a cache-staleness regression for deferred sessions.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st  # optional dep:
+# property tests skip cleanly when hypothesis is missing.
+
+import jax
+
+from repro.api import Engine, GraphDelta
+from repro.core import frontier
+from repro.gnn import models
+from repro.gnn.graph import from_edge_list
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: every single-program combo the incremental path claims support for
+#: (gat rides along in a dedicated fallback test below).
+COMBOS = [(e, a, k)
+          for e in ("sim", "single", "cloud")
+          for a in ("segment_sum", "pallas")
+          for k in ("gcn", "sage")]
+
+CASES_PER_COMBO = 9   # 12 combos x 9 = 108 generated cases
+
+
+# ----------------------------------------------------------------------------
+# case generation
+# ----------------------------------------------------------------------------
+
+def _random_graph(rng):
+    """Sparse connected graph: random spanning tree + a few chords."""
+    v = int(rng.integers(24, 72))
+    parents = [int(rng.integers(0, i)) for i in range(1, v)]
+    edges = [(i, p) for i, p in enumerate(parents, start=1)]
+    for _ in range(int(rng.integers(0, v // 3))):
+        a, b = (int(x) for x in rng.integers(0, v, size=2))
+        if a != b:
+            edges.append((a, b))
+    feats = rng.normal(size=(v, 4)).astype(np.float32)
+    return from_edge_list(v, np.array(edges, np.int64), feats)
+
+
+def _random_delta(g, rng):
+    """A random GraphDelta: any mix of vertex/edge churn and feature
+    upserts; ~10% of draws are completely empty."""
+    v, f = g.num_vertices, g.feature_dim
+    if rng.random() < 0.1:
+        return GraphDelta()
+    kw = {}
+    removed = np.empty(0, np.int64)
+    if rng.random() < 0.25:
+        n_rm = int(rng.integers(1, 3))
+        if rng.random() < 0.3:
+            # the remove-last-vertex special case: the compaction must
+            # shrink the trailing shard and the cache must follow.
+            removed = np.unique(np.concatenate(
+                [[v - 1], rng.choice(v - 1, size=n_rm - 1,
+                                     replace=False)])) if n_rm > 1 \
+                else np.array([v - 1])
+        else:
+            removed = rng.choice(v, size=n_rm, replace=False)
+        kw["remove_vertices"] = removed
+    if rng.random() < 0.55:
+        # upserts may not target a vertex the same delta removes
+        pool = np.setdiff1d(np.arange(v), removed)
+        k = min(int(rng.integers(1, max(2, v // 8))), len(pool))
+        if k:
+            ids = rng.choice(pool, size=k, replace=False)
+            kw["feature_ids"] = ids
+            kw["feature_values"] = rng.normal(size=(k, f)).astype(
+                np.float32)
+    if rng.random() < 0.4:
+        n_new = int(rng.integers(1, 3))
+        kw["add_features"] = rng.normal(size=(n_new, f)).astype(np.float32)
+        kw["add_edges"] = [(v + i, int(t)) for i, t in
+                           enumerate(rng.choice(v, size=n_new))]
+    if rng.random() < 0.4:
+        a, b = (int(x) for x in rng.integers(0, v, size=2))
+        if a != b:
+            kw.setdefault("add_edges", [])
+            kw["add_edges"] = list(kw["add_edges"]) + [(a, b), (b, a)]
+    if rng.random() < 0.3 and g.num_edges:
+        e = int(rng.integers(0, g.num_edges))
+        s, r = int(g.senders[e]), int(g.receivers[e])
+        kw["remove_edges"] = [(s, r), (r, s)]
+    return GraphDelta(**kw)
+
+
+def _fresh_reference(params, kind, executor, aggregation, g, feats):
+    """From-scratch recompute: a brand-new Engine.compile on the mutated
+    graph, queried through a cache-less session. Single-program numerics
+    are partition-independent, so this is the strongest possible oracle."""
+    eng = Engine((params, kind), cluster="1A+2B+1C", executor=executor,
+                 aggregation=aggregation)
+    return np.asarray(eng.compile(g).session().query(feats).embeddings)
+
+
+def _run_case(seed, executor, aggregation, kind):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng)
+    params = models.gnn_init(jax.random.PRNGKey(seed % 97), kind,
+                             [g.feature_dim, 8, 4])
+    eng = Engine((params, kind), cluster="1A+2B+1C", executor=executor,
+                 aggregation=aggregation)
+    # max_fraction=1.0 forces the frontier path whenever it is sound —
+    # the fuzzer wants maximal incremental coverage, not fallbacks.
+    sess = eng.compile(g).session(activation_cache=True,
+                                  frontier_max_fraction=1.0)
+    got = np.asarray(sess.query().embeddings)
+    want = _fresh_reference(params, kind, executor, aggregation,
+                            sess.plan.graph, None)
+    assert np.array_equal(got, want), (
+        f"cold-cache parity break: seed={seed} {executor}/{aggregation}/"
+        f"{kind}")
+    for step in range(int(rng.integers(1, 4))):
+        delta = _random_delta(sess.plan.graph, rng)
+        sess.update(delta)
+        g2 = sess.plan.graph
+        feats = None
+        if rng.random() < 0.5:   # per-query feature override
+            feats = rng.normal(size=(g2.num_vertices,
+                                     g2.feature_dim)).astype(np.float32)
+        got = np.asarray(sess.query(feats).embeddings)
+        want = _fresh_reference(params, kind, executor, aggregation,
+                                g2, feats)
+        assert np.array_equal(got, want), (
+            f"parity break: seed={seed} step={step} {executor}/"
+            f"{aggregation}/{kind} incremental="
+            f"{sess.last_frontier is not None}")
+
+
+# ----------------------------------------------------------------------------
+# the fuzz harness (seeded — runs without hypothesis)
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor,aggregation,kind", COMBOS)
+def test_incremental_differential_fuzz(executor, aggregation, kind):
+    """>=100 randomized delta streams across every supported combo, each
+    asserting bit-parity of cached-incremental vs fresh-compile."""
+    base = COMBOS.index((executor, aggregation, kind)) * 1000
+    for i in range(CASES_PER_COMBO):
+        _run_case(base + i, executor, aggregation, kind)
+
+
+def test_incremental_fuzz_takes_frontier_path():
+    """Meta-check on the harness itself: the incremental path must
+    actually fire (a fuzzer that always falls back proves nothing)."""
+    rng = np.random.default_rng(7)
+    v = 64
+    edges = np.array([(i, i + 1) for i in range(v - 1)], np.int64)
+    g = from_edge_list(v, edges,
+                       rng.normal(size=(v, 4)).astype(np.float32))
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 8, 4])
+    eng = Engine((params, "gcn"), cluster="1A+2B+1C", executor="sim",
+                 aggregation="segment_sum")
+    sess = eng.compile(g).session(activation_cache=True,
+                                  frontier_max_fraction=1.0)
+    sess.query()
+    sess.update(GraphDelta(feature_ids=[3], feature_values=np.ones(
+        (1, g.feature_dim), np.float32)))
+    sess.query()
+    assert sess.last_frontier is not None
+    assert len(sess.last_frontier.rows[-1]) < v   # genuinely partial
+
+
+def test_gat_falls_back_and_stays_exact():
+    """GAT re-weights edges per layer, so it has no frontier support —
+    the cache must serve it through full passes (and the empty-frontier
+    fast path) without ever diverging."""
+    for seed in range(4):
+        _run_case(90_000 + seed, "sim", "segment_sum", "gat")
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None, derandomize=True)
+def test_incremental_fuzz_hypothesis(seed):
+    """Property form of the same runner (runs when hypothesis is
+    installed; see _hypothesis_compat)."""
+    executor, aggregation, kind = COMBOS[seed % len(COMBOS)]
+    _run_case(seed, executor, aggregation, kind)
+
+
+# ----------------------------------------------------------------------------
+# mesh-bsp spot-check (multi-device layouts need their own process)
+# ----------------------------------------------------------------------------
+
+def test_incremental_query_mesh_bsp_subprocess():
+    """mesh-bsp, both aggregations: cached incremental queries are
+    bit-identical to a cache-less session fed the same delta stream.
+    (Mesh numerics are layout-dependent, so the reference shares the
+    plan chain instead of re-partitioning from scratch.)"""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.api import Engine, GraphDelta
+        from repro.gnn import models
+        from repro.gnn.graph import from_edge_list
+        rng = np.random.default_rng(0)
+        v = 256
+        edges = np.array([(i, (i + 1) % v) for i in range(v)], np.int64)
+        g = from_edge_list(v, edges,
+                           rng.normal(size=(v, 4)).astype(np.float32))
+        params = models.gnn_init(jax.random.PRNGKey(0), 'gcn',
+                                 [g.feature_dim, 8, 4])
+        for aggregation in ('segment_sum', 'pallas'):
+            eng = Engine((params, 'gcn'), cluster='4B',
+                         executor='mesh-bsp', aggregation=aggregation)
+            inc = eng.compile(g).session(activation_cache=True,
+                                         frontier_max_fraction=1.0)
+            ref = eng.compile(g).session()
+            assert np.array_equal(inc.query().embeddings,
+                                  ref.query().embeddings), aggregation
+            deltas = [
+                GraphDelta(feature_ids=[7], feature_values=np.ones(
+                    (1, g.feature_dim), np.float32)),        # frontier path
+                GraphDelta(add_edges=[(0, 9), (9, 0)]),      # structural
+                GraphDelta(feature_ids=[40], feature_values=-np.ones(
+                    (1, g.feature_dim), np.float32)),        # re-armed
+            ]
+            hits = 0
+            for d in deltas:
+                inc.update(d)
+                ref.update(d)
+                a = np.asarray(inc.query().embeddings)
+                b = np.asarray(ref.query().embeddings)
+                assert np.array_equal(a, b), aggregation
+                hits += inc.last_frontier is not None
+            assert hits >= 2, (aggregation, hits)
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+# ----------------------------------------------------------------------------
+# frontier oracle: hand-computed k-hop balls
+# ----------------------------------------------------------------------------
+
+def _graph_of(v, edge_pairs):
+    feats = np.zeros((v, 2), np.float32)
+    return from_edge_list(v, np.array(edge_pairs, np.int64).reshape(-1, 2),
+                          feats)
+
+
+def _rows(graph, seeds, layers, extra=None):
+    extra = (np.empty((0, 2), np.int64) if extra is None
+             else np.asarray(extra, np.int64))
+    return [set(r.tolist()) for r in frontier.expand_frontier(
+        graph, np.asarray(seeds, np.int64), extra, layers)]
+
+
+def test_frontier_oracle_path_graph():
+    # 0-1-2-3-4-5: seeds {2} -> D1 = {1,2,3}, D2 = {0..4}
+    g = _graph_of(6, [(i, i + 1) for i in range(5)])
+    assert _rows(g, [2], 2) == [{1, 2, 3}, {0, 1, 2, 3, 4}]
+
+
+def test_frontier_oracle_star_graph():
+    # hub 0, leaves 1..5: seed {1} -> D1 = {0,1}, D2 = everything
+    g = _graph_of(6, [(0, i) for i in range(1, 6)])
+    assert _rows(g, [1], 2) == [{0, 1}, {0, 1, 2, 3, 4, 5}]
+    # seed at the hub floods in one hop
+    assert _rows(g, [0], 1) == [{0, 1, 2, 3, 4, 5}]
+
+
+def test_frontier_oracle_disconnected_components():
+    # two triangles 0-1-2 and 3-4-5: dirt never crosses components
+    g = _graph_of(6, [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)])
+    assert _rows(g, [0], 3) == [{0, 1, 2}] * 3
+
+
+def test_frontier_oracle_self_loop():
+    g = _graph_of(3, [(0, 0), (0, 1), (1, 2)])
+    # from_edge_list drops self loops; 0's ball grows along 0-1-2 only
+    assert _rows(g, [0], 2) == [{0, 1}, {0, 1, 2}]
+
+
+def test_frontier_oracle_extra_edges_bridge_removed():
+    # path 0-1-2-3; pretend 1-2 was just removed: the union adjacency
+    # must still carry dirt across the cut in BOTH directions.
+    g = _graph_of(4, [(0, 1), (2, 3)])
+    assert _rows(g, [1], 2, extra=[(1, 2), (2, 1)]) == [
+        {0, 1, 2}, {0, 1, 2, 3}]
+    assert _rows(g, [2], 2, extra=[(1, 2), (2, 1)]) == [
+        {1, 2, 3}, {0, 1, 2, 3}]
+
+
+def test_removed_edge_dirties_both_former_endpoints():
+    """Removing edge (1,2) from 0-1-2-3 must dirty BOTH former
+    endpoints' l-hop neighborhoods — vertex 3 (one hop from 2) changes
+    at layer 2 even though it is two hops from the nearer endpoint."""
+    g = _graph_of(4, [(0, 1), (1, 2), (2, 3)])
+    fu = frontier.fold_delta_frontier(
+        g, [GraphDelta(remove_edges=[(1, 2), (2, 1)])])
+    assert set(fu.seeds.tolist()) == {1, 2}
+    assert fu.structural and not fu.removed_vertices
+    pairs = {tuple(p) for p in fu.extra_edges.tolist()}
+    assert {(1, 2), (2, 1)} <= pairs
+    rows = [set(r.tolist()) for r in frontier.expand_frontier(
+        fu.graph, fu.seeds, fu.extra_edges, 2)]
+    assert rows[0] == {0, 1, 2, 3}      # 1-hop: both sides of the cut
+    assert rows[1] == {0, 1, 2, 3}
+
+
+def test_removed_vertex_dirties_former_neighbors():
+    # star: removing the hub must seed every leaf (renumbered).
+    g = _graph_of(4, [(0, 1), (0, 2), (0, 3)])
+    fu = frontier.fold_delta_frontier(g, [GraphDelta(remove_vertices=[0])])
+    assert fu.removed_vertices and fu.structural
+    # leaves 1,2,3 renumber to 0,1,2 and all were the hub's neighbors
+    assert set(fu.seeds.tolist()) == {0, 1, 2}
+
+
+def test_fold_composes_vertex_maps_across_deltas():
+    g = _graph_of(5, [(i, i + 1) for i in range(4)])
+    fu = frontier.fold_delta_frontier(g, [
+        GraphDelta(feature_ids=[4], feature_values=np.ones((1, 2),
+                                                           np.float32)),
+        GraphDelta(remove_vertices=[0]),   # everything shifts down by 1
+    ])
+    # old vertex 4 is now 3 and must still be dirty; old 1 (ex-neighbor
+    # of removed 0) is now 0.
+    assert 3 in fu.seeds.tolist()
+    assert 0 in fu.seeds.tolist()
+    assert fu.vmap[0] == -1 and fu.vmap[4] == 3
+
+
+# ----------------------------------------------------------------------------
+# cache staleness: deferred consistency
+# ----------------------------------------------------------------------------
+
+def _line_session(**kw):
+    rng = np.random.default_rng(3)
+    v = 48
+    g = from_edge_list(v, np.array([(i, i + 1) for i in range(v - 1)],
+                                   np.int64),
+                       rng.normal(size=(v, 4)).astype(np.float32))
+    params = models.gnn_init(jax.random.PRNGKey(3), "gcn",
+                             [g.feature_dim, 8, 4])
+    eng = Engine((params, "gcn"), cluster="1A+2B+1C", executor="sim",
+                 aggregation="segment_sum")
+    return params, eng.compile(g).session(**kw)
+
+
+def test_deferred_session_does_not_serve_stale_cache_across_flush():
+    """updates='deferred' buffers deltas: pre-flush queries legitimately
+    serve the old graph (cache included), but the first query after the
+    coalesced flush must reflect the repaired graph bit-exactly."""
+    params, sess = _line_session(activation_cache=True,
+                                 frontier_max_fraction=1.0,
+                                 updates="deferred")
+    before = np.asarray(sess.query().embeddings)
+    delta = GraphDelta(
+        add_edges=[(0, 20), (20, 0)],
+        feature_ids=[5],
+        feature_values=np.full((1, 4), 2.0, np.float32))
+    sess.update(delta)                     # buffered, NOT applied
+    stale = np.asarray(sess.query().embeddings)
+    # deferred semantics: consistently stale — identical to pre-update
+    assert np.array_equal(before, stale)
+    sess.flush_updates()
+    after = np.asarray(sess.query().embeddings)
+    g2 = sess.plan.graph
+    eng = Engine((params, "gcn"), cluster="1A+2B+1C", executor="sim",
+                 aggregation="segment_sum")
+    want = np.asarray(eng.compile(g2).session().query().embeddings)
+    assert np.array_equal(after, want)
+    assert not np.array_equal(after, before)   # the delta really landed
+
+
+def test_sync_session_cache_survives_adapt():
+    """adapt() re-assignment must not corrupt single-family caches
+    (their numerics are assignment-independent)."""
+    params, sess = _line_session(activation_cache=True,
+                                 frontier_max_fraction=1.0)
+    sess.query()
+    for _ in range(3):
+        sess.adapt()
+    got = np.asarray(sess.query().embeddings)
+    g2 = sess.plan.graph
+    eng = Engine((params, "gcn"), cluster="1A+2B+1C", executor="sim",
+                 aggregation="segment_sum")
+    want = np.asarray(eng.compile(g2).session().query().embeddings)
+    assert np.array_equal(got, want)

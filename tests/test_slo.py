@@ -312,6 +312,41 @@ def test_load_bench_curve_reads_repo_benchmark():
     assert slo.load_bench_curve("/nonexistent/BENCH.json") == {}
 
 
+def test_load_bench_curve_falls_back_with_warning(tmp_path):
+    """An unswept (executor, aggregation) pair must warn and seed from
+    the closest available curve instead of silently starting cold."""
+    import json
+    import warnings as _warnings
+    path = tmp_path / "BENCH_serving.json"
+    rows = [{"executor": "sim", "aggregation": "segment_sum",
+             "batch": b, "batched_s": 0.001 * b} for b in (1, 2, 4)]
+    rows += [{"executor": "sim", "aggregation": "pallas",
+              "batch": b, "batched_s": 0.002 * b} for b in (1, 2, 4)]
+    path.write_text(json.dumps({"rows": rows}))
+    # exact match: no warning
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        exact = slo.load_bench_curve(str(path), executor="sim",
+                                     aggregation="pallas")
+    assert exact == {b: 0.002 * b for b in (1, 2, 4)}
+    # same executor, unswept aggregation: warn + a (sim, *) curve
+    # (ties break lexicographically, so "pallas" wins over "segment_sum")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        curve = slo.load_bench_curve(str(path), executor="sim",
+                                     aggregation="bogus")
+    assert curve == {b: 0.002 * b for b in (1, 2, 4)}
+    # unswept executor, swept aggregation: warn + same-aggregation curve
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        curve = slo.load_bench_curve(str(path), executor="mesh-bsp",
+                                     aggregation="pallas")
+    assert curve == {b: 0.002 * b for b in (1, 2, 4)}
+    # nothing related: warn + any curve rather than {}
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        curve = slo.load_bench_curve(str(path), executor="mesh-bsp",
+                                     aggregation="bogus")
+    assert curve
+
+
 def test_adaptive_server_integration(setup):
     g, params, plan = setup
     server = plan.server(max_batch=8, max_wait=1e9,
