@@ -1,0 +1,238 @@
+"""Geo-distributed fleet benchmark: site-count x skew x failure sweep.
+
+Sweeps fleet size (number of fog sites) x zipfian site-popularity skew x
+injected site failures for the geo-distributed serving layer
+(``repro.api.fleet``) against two baselines on the *same* arrival trace:
+
+  fleet           FleetServer: nearest-site routing from per-request geo
+                  origins, load spillover, cloud failover, per-site
+                  pipeline clocks, stale-tolerant halo exchange
+                  (``halo_async`` + ``staleness_bound``).
+  single-cluster  one Server over one fog-site plan — every request,
+                  regardless of origin, funnels through one pipeline.
+  all-cloud       one Server over the ``cloud`` executor plan — the
+                  paper's Fig. 3 cloud baseline at fleet scale (WAN
+                  upload + datacenter RTT per batch).
+
+The arrival rate scales with fleet size (``load`` x sites x the
+single-request sustainable rate), so the sweep measures whether the
+fleet actually converts added sites into tail-latency headroom, and what
+popularity skew and a mid-trace site failure cost. Failure runs inject
+``set_down`` on the most popular site halfway through the trace; its
+queued work must be rerouted, not dropped.
+
+Writes the whole trajectory to ``BENCH_fleet.json``.
+
+Acceptance guard (also run by scripts/ci.sh via --smoke): the fleet
+beats all-cloud on p95 latency at >= 2 sites, and one injected site
+failure drops zero requests (every submitted request is answered).
+
+    PYTHONPATH=src python benchmarks/fleet.py            # full sweep
+    PYTHONPATH=src python benchmarks/fleet.py --smoke    # CI guard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(REPO, "src", "repro")):
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+#: centroid pool (lat, lon) — fleets of size N use the first N.
+CITY_POOL = [
+    ("stockholm", (59.33, 18.07)),
+    ("vienna", (48.21, 16.37)),
+    ("london", (51.51, -0.13)),
+    ("lisbon", (38.72, -9.14)),
+    ("athens", (37.98, 23.73)),
+]
+
+
+def build_fleet(args, nsites):
+    import jax
+
+    from repro.api import Engine
+    from repro.gnn import datasets, models
+
+    graph = datasets.load(args.dataset, scale=args.scale, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), args.kind,
+                             [graph.feature_dim, args.hidden, 8])
+    engine = Engine((params, args.kind), cluster=args.cluster,
+                    network=args.network, compressor=args.compressor,
+                    exchange="halo_async",
+                    staleness_bound=args.staleness_bound)
+    fleet = engine.compile_fleet(graph, dict(CITY_POOL[:nsites]))
+    return fleet, graph
+
+
+def run_fleet(fleet, trace, args, failures: int) -> dict:
+    from repro.api.server import Response
+
+    fs = fleet.server(capacity=args.capacity, max_batch=args.max_batch)
+    t0 = time.perf_counter()
+    if failures:
+        half = len(trace) // 2
+        for r in trace[:half]:
+            fs.submit(r)
+        rerouted = 0
+        for name in fleet.site_names[:failures]:
+            rerouted += fs.set_down(name)
+        for r in trace[half:]:
+            fs.submit(r)
+        out = fs.drain()
+    else:
+        rerouted = 0
+        out = fs.replay(list(trace))
+    wall = time.perf_counter() - t0
+    summary = fs.summarize(out)
+    summary["wall_s"] = wall
+    summary["rerouted"] = rerouted
+    summary["answered"] = sum(1 for r in out if isinstance(r, Response))
+    return summary
+
+
+def run_baseline(plan, trace, args) -> dict:
+    from repro.api import Server
+    server = plan.server(max_batch=args.max_batch)
+    t0 = time.perf_counter()
+    out = server.replay(list(trace))
+    wall = time.perf_counter() - t0
+    summary = Server.summarize(out)
+    summary["wall_s"] = wall
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + pass/fail guard (for scripts/ci.sh)")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_fleet.json"))
+    ap.add_argument("--dataset", default="siot")
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--kind", default="gcn")
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--cluster", default="1A+2B")
+    ap.add_argument("--network", default="wifi")
+    ap.add_argument("--compressor", default="daq")
+    ap.add_argument("--staleness-bound", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--sites", type=int, nargs="+", default=[1, 2, 3, 4])
+    ap.add_argument("--zipf", type=float, nargs="+", default=[0.0, 1.5],
+                    help="site-popularity skew exponents (0 = uniform)")
+    ap.add_argument("--failures", type=int, nargs="+", default=[0, 1],
+                    help="how many sites to take down mid-trace")
+    ap.add_argument("--load", type=float, default=1.0,
+                    help="arrival rate as a multiple of sites x the "
+                         "single-request sustainable rate")
+    ap.add_argument("--capacity", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--spread", type=float, default=1.5,
+                    help="gaussian origin scatter around centroids, degrees")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.scale = 0.05
+        args.requests = 48
+        args.sites = [2]
+        args.zipf = [1.0]
+        args.failures = [0, 1]
+        if args.out == ap.get_default("out"):   # don't dirty the worktree
+            import tempfile
+            args.out = os.path.join(tempfile.gettempdir(),
+                                    "BENCH_fleet.smoke.json")
+    if max(args.sites) > len(CITY_POOL):
+        raise SystemExit(f"--sites max is {len(CITY_POOL)} "
+                         f"(the centroid pool)")
+
+    from repro.api import traces
+
+    sweep = []
+    print("serving,sites,zipf,failures,p95_s,throughput_rps,"
+          "local,spilled,failed_over,rerouted,dropped")
+    graph = None
+    for nsites in sorted(set(args.sites)):
+        fleet, graph = build_fleet(args, nsites)
+        s1 = fleet.sites[0].plan.session().account().total_latency
+        rate = args.load * nsites / s1
+        for zipf in args.zipf:
+            origin_fn = traces.geo_origins(
+                fleet.centroids(), spread=args.spread, zipf_s=zipf,
+                seed=args.seed)
+            trace = traces.poisson(args.requests, rate, seed=args.seed,
+                                   origin_fn=origin_fn)
+            baselines = {
+                "single-cluster": run_baseline(fleet.sites[0].plan,
+                                               trace, args),
+                "all-cloud": run_baseline(fleet.cloud_plan, trace, args),
+            }
+            for name, row in baselines.items():
+                row.update(serving=name, sites=nsites, zipf=zipf,
+                           failures=0, rate_rps=rate)
+                sweep.append(row)
+                print(f"{name},{nsites},{zipf},0,"
+                      f"{row['latency_p95_s']:.3f},"
+                      f"{row['throughput_rps']:.2f},-,-,-,0,0")
+            for failures in args.failures:
+                if failures >= nsites and failures > 0:
+                    continue   # keep at least one site up
+                row = run_fleet(fleet, trace, args, failures)
+                row.update(serving="fleet", sites=nsites, zipf=zipf,
+                           failures=failures, rate_rps=rate)
+                sweep.append(row)
+                rt = row["routes"]
+                print(f"fleet,{nsites},{zipf},{failures},"
+                      f"{row['latency_p95_s']:.3f},"
+                      f"{row['throughput_rps']:.2f},{rt['local']},"
+                      f"{rt['spilled']},{rt['failed_over']},"
+                      f"{row['rerouted']},{row['dropped']}")
+
+    payload = {
+        "benchmark": "fleet_geo_serving",
+        "config": {k: v for k, v in vars(args).items() if k != "smoke"},
+        "graph": {"vertices": graph.num_vertices,
+                  "edges": graph.num_edges},
+        "centroids": dict(CITY_POOL),
+        "rows": sweep,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(sweep)} rows)")
+
+    # Acceptance guard: (1) at >= 2 sites the fleet beats the all-cloud
+    # baseline on p95 on every (zipf, no-failure) point; (2) an injected
+    # site failure drops nothing — every submitted request is answered.
+    failures_list = []
+    cloud = {(r["sites"], r["zipf"]): r for r in sweep
+             if r["serving"] == "all-cloud"}
+    for r in sweep:
+        if r["serving"] != "fleet":
+            continue
+        if r["failures"] == 0 and r["sites"] >= 2:
+            c = cloud[(r["sites"], r["zipf"])]
+            if not r["latency_p95_s"] < c["latency_p95_s"]:
+                failures_list.append(
+                    f"sites={r['sites']} zipf={r['zipf']}: fleet p95 "
+                    f"{r['latency_p95_s']:.3f}s !< all-cloud "
+                    f"{c['latency_p95_s']:.3f}s")
+        if r["dropped"] != 0 or r["answered"] != args.requests:
+            failures_list.append(
+                f"sites={r['sites']} zipf={r['zipf']} "
+                f"failures={r['failures']}: answered {r['answered']}"
+                f"/{args.requests}, dropped={r['dropped']}")
+    if failures_list:
+        print("FLEET GUARD FAILED:")
+        for f in failures_list:
+            print(f"  - {f}")
+        return 1
+    print("fleet guard OK: fleet < all-cloud p95 at >= 2 sites; "
+          "zero drops under site failure")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

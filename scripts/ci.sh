@@ -33,3 +33,6 @@ PYTHONPATH=src python benchmarks/serving_latency.py --smoke
 # SLO control plane: under >= 2x overload the deadline/priority/degradation
 # server must beat admit-all on goodput AND high-priority tail latency.
 PYTHONPATH=src python benchmarks/slo.py --smoke
+# Geo-distributed fleet: at >= 2 sites the fleet must beat the all-cloud
+# baseline on p95, and one injected site failure must drop zero requests.
+PYTHONPATH=src python benchmarks/fleet.py --smoke

@@ -2,13 +2,15 @@
 
 Audits compiled :class:`~repro.api.plan.Plan` objects, the Pallas launch
 geometry they imply, and the process-wide program/operand caches *without
-executing anything*.  Five analyzer families (see ``docs/analysis.md`` for
+executing anything*.  Six analyzer families (see ``docs/analysis.md`` for
 the invariant catalogue):
 
   plan      partition coverage/disjointness, halo consistency, ELL padding,
             capacity skew, post-update layout agreement
   frontier  dirty-frontier closure soundness + cache-revision agreement of
             a session's pending incremental state
+  fleet     geo-fleet router coverage, cross-tier graph-revision agreement,
+            staleness_bound consistency of the stale-tolerant exchange
   kernel    jax.eval_shape lint of block_spmm / dequant_spmm launches:
             grid divisibility, prefetch-table bounds, wire dtype, VMEM/SMEM
   cache     program/BlockCsr cache-key completeness + closure-pin detection
@@ -32,6 +34,7 @@ from repro.analysis.diagnostics import (AnalysisContext, CHECKS, Diagnostic,
 
 # Importing the check modules registers every check in CHECKS.
 from repro.analysis import cache_audit    # noqa: E402,F401
+from repro.analysis import fleet_checks   # noqa: E402,F401
 from repro.analysis import frontier_checks  # noqa: E402,F401
 from repro.analysis import hlo            # noqa: E402,F401
 from repro.analysis import kernel_lint    # noqa: E402,F401
@@ -40,6 +43,7 @@ from repro.analysis import plan_checks    # noqa: E402,F401
 __all__ = [
     "AnalysisContext", "CHECKS", "Diagnostic", "PlanInvariantWarning",
     "PlanValidationError", "Report", "SEVERITIES", "VALIDATE_MODES",
-    "cache_audit", "checks_for", "frontier_checks", "hlo", "kernel_lint",
+    "cache_audit", "checks_for", "fleet_checks", "frontier_checks", "hlo",
+    "kernel_lint",
     "plan_checks", "register_check", "run_checks", "verify_plan",
 ]

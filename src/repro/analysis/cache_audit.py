@@ -46,6 +46,10 @@ KNOB_COVERAGE = {
     # Selects WHICH runtime entry point runs (tag/mesh), not how one
     # program lowers; the mesh program key carries tag + mesh_key.
     "executor": {"kind": "dispatch", "via": ("tag", "mesh_key")},
+    # Selects WHETHER a serve runs the fresh sync program or the stale
+    # replay program ("stale"/"stale_many" tags); each lowers under its
+    # own tag, so the bound itself never changes a cached program.
+    "staleness_bound": {"kind": "dispatch", "via": ("tag",)},
     # Resolves to the use_kernels flag baked into the program.
     "aggregation": {"kind": "lowering", "via": ("use_kernels",)},
     # Pricing/planning inputs: consumed before any program is traced.

@@ -88,6 +88,12 @@ class AnalysisContext:
     #: FrontierPlan`, from ``Session.frontier_state()``) for the frontier
     #: family; None on sessions without an activation cache.
     frontier: Optional[object] = None
+    #: geo-distributed fleet state for the fleet family: a
+    #: :class:`repro.api.fleet.FleetServer` (router + live per-site
+    #: sessions; the full audit) or a bare ``Fleet`` (compiled plans
+    #: only — the revision check still runs, the router/serving checks
+    #: report what a bare fleet cannot violate).
+    fleet: Optional[object] = None
     #: representative micro-batch size for lint of the batched kernels.
     batch_probe: int = 8
 

@@ -25,10 +25,15 @@ _LAZY = {
     "GraphDelta": "repro.api.updates",
     "UpdateRequest": "repro.api.updates",
     "UpdateReport": "repro.api.updates",
+    "Fleet": "repro.api.fleet",
+    "FleetServer": "repro.api.fleet",
+    "Router": "repro.api.fleet",
+    "Site": "repro.api.fleet",
     "SLOPolicy": "repro.api.slo",
     "DegradationLevel": "repro.api.slo",
     "AdaptiveBatchController": "repro.api.slo",
     "Rejection": "repro.api.slo",
+    "fleet": "repro.api.fleet",     # submodule: resolves to the module
     "traces": "repro.api.traces",   # submodule: resolves to the module
     "updates": "repro.api.updates",  # submodule: resolves to the module
     "slo": "repro.api.slo",          # submodule: resolves to the module

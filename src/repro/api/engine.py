@@ -48,6 +48,11 @@ class Engine:
         segment_sum). With a DAQ compressor the mesh executor's kernel
         path also quantizes the halo wire and dequantizes inside the
         fused ``dequant_spmm`` kernel.
+      staleness_bound: with the stale-tolerant ``"halo_async"`` exchange,
+        how many serves may replay recorded halo tables before the next
+        fresh synchronous exchange is forced (0 = every serve syncs,
+        bit-identical to ``exchange="halo"``). Rejected for exchanges
+        without stale tolerance.
       network: collection-network profile ("wifi" / "4g" / "5g").
       hidden: hidden width used by the analytic workload model.
       sync_cost: one BSP synchronization (delta in Eq. 6/7).
@@ -73,6 +78,7 @@ class Engine:
                  sync_cost: float = simulation.DEFAULT_SYNC_COST,
                  bytes_per_vertex: Optional[float] = None,
                  aggregation: str = "auto",
+                 staleness_bound: int = 0,
                  update_max_imbalance: float = 2.0,
                  update_max_cut_growth: float = 1.5,
                  validate: str = "off"):
@@ -96,6 +102,16 @@ class Engine:
         if validate not in ("off", "warn", "strict"):
             raise ValueError(f"unknown validate mode {validate!r}; "
                              f"available: off, warn, strict")
+        staleness_bound = int(staleness_bound)
+        if staleness_bound < 0:
+            raise ValueError(f"staleness_bound must be >= 0, "
+                             f"got {staleness_bound}")
+        if staleness_bound > 0 and not getattr(self._exchange,
+                                               "stale_tolerant", False):
+            raise ValueError(
+                f"staleness_bound={staleness_bound} needs a stale-tolerant "
+                f"exchange (e.g. 'halo_async'), got "
+                f"{EXCHANGES.canonical(exchange)!r}")
         self.config = EngineConfig(
             partitioner=PARTITIONERS.canonical(partitioner),
             placement=PLACEMENTS.canonical(placement),
@@ -107,6 +123,7 @@ class Engine:
             cluster_spec=cluster if isinstance(cluster, str) else None,
             hidden=hidden, seed=seed, sync_cost=sync_cost,
             bytes_per_vertex=bytes_per_vertex, aggregation=aggregation,
+            staleness_bound=staleness_bound,
             update_max_imbalance=update_max_imbalance,
             update_max_cut_growth=update_max_cut_growth,
             validate=validate)
@@ -151,6 +168,66 @@ class Engine:
                  fogs=fogs, placement=placement, partitioned=partitioned,
                  config=cfg))
 
+    def compile_fleet(self, graph: Graph, sites) -> "Fleet":
+        """Compile a geo-distributed fleet: one Plan per named fog site
+        plus the ``"cloud"`` executor as last-resort tier.
+
+        ``sites`` maps site name -> ``(lat, lon)`` centroid (dict, or a
+        sequence of ``(name, (lat, lon))`` / ``(name, lat, lon)``
+        entries). Every site serves THIS engine's model with THIS
+        engine's pipeline knobs; each runs its own setup phase with a
+        per-site profiling seed (``seed + index``) — N independently
+        profiled deployments of one shared fog model, the paper's
+        multi-edge-server shape. The cloud plan is the same model
+        compiled for ``executor="cloud"`` (always fresh: no cross-fog
+        exchange, so ``staleness_bound`` does not apply there).
+
+        Returns a :class:`repro.api.fleet.Fleet`; open the serving
+        facade with ``fleet.server(...)``.
+        """
+        from repro.api.fleet import Fleet, Site
+        if isinstance(sites, dict):
+            items = list(sites.items())
+        else:
+            items = []
+            for entry in sites:
+                entry = tuple(entry)
+                if len(entry) == 3:          # (name, lat, lon)
+                    items.append((entry[0], (entry[1], entry[2])))
+                elif len(entry) == 2:        # (name, (lat, lon))
+                    items.append((entry[0], tuple(entry[1])))
+                else:
+                    raise ValueError(
+                        f"site entry must be (name, (lat, lon)) or "
+                        f"(name, lat, lon), got {entry!r}")
+        if not items:
+            raise ValueError("compile_fleet needs at least one site")
+        cfg = self.config
+        cluster = cfg.cluster_spec if cfg.cluster_spec else self.cluster
+
+        def _engine(**over) -> "Engine":
+            kw = dict(network=cfg.network, partitioner=cfg.partitioner,
+                      placement=cfg.placement, compressor=cfg.compressor,
+                      exchange=cfg.exchange, executor=cfg.executor,
+                      hidden=cfg.hidden, seed=cfg.seed,
+                      sync_cost=cfg.sync_cost,
+                      bytes_per_vertex=cfg.bytes_per_vertex,
+                      aggregation=cfg.aggregation,
+                      staleness_bound=cfg.staleness_bound,
+                      update_max_imbalance=cfg.update_max_imbalance,
+                      update_max_cut_growth=cfg.update_max_cut_growth,
+                      validate=cfg.validate)
+            kw.update(over)
+            return Engine(self.model, cluster, **kw)
+
+        site_objs = tuple(
+            Site(name=name, location=loc,
+                 plan=_engine(seed=cfg.seed + i).compile(graph))
+            for i, (name, loc) in enumerate(items))
+        cloud_plan = _engine(executor="cloud", staleness_bound=0
+                             ).compile(graph)
+        return Fleet(sites=site_objs, cloud_plan=cloud_plan)
+
     @classmethod
     def from_plan(cls, plan: Plan) -> "Engine":
         """Reconstruct the Engine a plan was compiled with (same knobs).
@@ -171,6 +248,7 @@ class Engine:
                    sync_cost=cfg.sync_cost,
                    bytes_per_vertex=cfg.bytes_per_vertex,
                    aggregation=cfg.aggregation,
+                   staleness_bound=cfg.staleness_bound,
                    update_max_imbalance=cfg.update_max_imbalance,
                    update_max_cut_growth=cfg.update_max_cut_growth,
                    validate=cfg.validate)

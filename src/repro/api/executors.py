@@ -147,6 +147,28 @@ class ExecutorBackend:
         """
         raise NotImplementedError
 
+    # -- stale-tolerant halo serving (exchange="halo_async") -----------------
+
+    def supports_stale_halo(self, plan, aggregation: str) -> bool:
+        """Whether this backend can replay recorded halo tables
+        (``run_stale``/``run_stale_many``). Only the mesh backend has a
+        real exchange to skip; single-program backends serve stale
+        requests through their ordinary path (the Session still does the
+        version/staleness accounting)."""
+        return False
+
+    def run_stale(self, plan, feats, assignment, pg,
+                  halo_tables, aggregation: str = "segment_sum"):
+        """Serve one query replaying ``halo_tables`` (the per-layer
+        boundary-row tables of an earlier fresh pass) instead of running
+        the per-layer exchange. Local rows use the CURRENT ``feats``;
+        only cross-partition reads are stale."""
+        raise NotImplementedError
+
+    def run_stale_many(self, plan, feats, assignment, pg,
+                       halo_tables, aggregation: str = "segment_sum"):
+        raise NotImplementedError
+
 
 @functools.partial(jax.jit, static_argnames=("kind",))
 def _jit_gnn_apply(params, kind, h, senders, receivers, mask):
@@ -611,6 +633,26 @@ class _MeshBsp(ExecutorBackend):
             rows_per_layer, cached_layers, exchange=exchange,
             aggregation=aggregation, halo_quant=hq)
         return merged[-1], merged
+
+    def supports_stale_halo(self, plan, aggregation):
+        return True
+
+    def run_stale(self, plan, feats, assignment, pg, halo_tables,
+                  aggregation="segment_sum"):
+        """Replay recorded halo tables through the "stale" shard_map
+        program (no per-layer collective; see ``bsp.bsp_infer_stale``)."""
+        return bsp.bsp_infer_stale(
+            list(plan.model.params), plan.model.kind,
+            np.asarray(feats, np.float32), pg, halo_tables,
+            aggregation=aggregation)
+
+    def run_stale_many(self, plan, feats, assignment, pg, halo_tables,
+                       aggregation="segment_sum"):
+        stacked = _as_stack(feats)
+        out = bsp.bsp_infer_stale_many(
+            list(plan.model.params), plan.model.kind, stacked, pg,
+            halo_tables, aggregation=aggregation)
+        return [np.asarray(o) for o in out]
 
 
 EXECUTORS.register("sim", _SingleProgram("sim", "multi"))

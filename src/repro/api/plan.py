@@ -68,6 +68,12 @@ class EngineConfig:
     # (auto = the Pallas block-CSR kernels wherever supported on TPU,
     # segment_sum elsewhere). See runtime.bsp.resolve_aggregation.
     aggregation: str = "auto"
+    # Stale-tolerant serving bound for the "halo_async" exchange: a serve
+    # may replay recorded halo tables up to this many versions old before
+    # the next fresh synchronous exchange is forced. 0 (the default) means
+    # every serve syncs — bit-identical to exchange="halo". Only legal with
+    # a stale-tolerant exchange entry (Engine validates eagerly).
+    staleness_bound: int = 0
     # Dynamic-update repair thresholds (Engine.apply_delta): fall back to a
     # full recompile when the repaired partitioning's imbalance (max size /
     # uniform share) exceeds update_max_imbalance x the pre-update

@@ -84,6 +84,10 @@ class Request:
     important) — both are inert without the Server's SLO control plane,
     except that a deadline always closes an open micro-batch early enough
     to remain meetable (see ``Server.max_wait``).
+
+    ``origin`` is the request's geo coordinates ``(lat, lon)`` — read by
+    the fleet router (``repro.api.fleet``) to pick the nearest fog site;
+    inert on a single-cluster ``Server``.
     """
     features: Optional[np.ndarray] = None
     arrival_time: Optional[float] = None
@@ -91,6 +95,7 @@ class Request:
     deadline: Optional[float] = None
     priority: int = 0
     request_id: Optional[int] = None
+    origin: Optional[Tuple[float, float]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +110,16 @@ class Response(QueryResult):
     Control-plane outcome: ``deadline_met`` is None for best-effort
     requests, else whether ``latency <= deadline``; ``degradation`` is
     the ladder rung this request was served at (0 = native knobs).
+
+    Fleet outcome (``repro.api.fleet``; inert on a single-cluster
+    server): ``site`` names the fog site (or "cloud") that served the
+    request, ``route`` how it got there ("local" = nearest site,
+    "spilled" = load spillover to another site, "failed_over" = rerouted
+    off a down/saturated tier), ``routing_delay`` the cross-site
+    forwarding time included in ``latency``. ``staleness`` is how many
+    serves old the halo features this response read were (0 = fresh
+    synchronous exchange; > 0 only under ``exchange="halo_async"`` with
+    a positive ``staleness_bound``).
     """
     request_id: int = 0
     arrival_time: float = 0.0
@@ -120,6 +135,10 @@ class Response(QueryResult):
     deadline: Optional[float] = None
     deadline_met: Optional[bool] = None
     degradation: int = 0
+    staleness: int = 0
+    site: Optional[str] = None
+    route: str = "local"
+    routing_delay: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -478,13 +497,17 @@ class Server:
         self._degraded[level] = (base_plan, sess)
         return sess
 
-    def _account_for(self, key: str, batch_size: int,
-                     level: int) -> simulation.ServingResult:
-        ck = (key, batch_size, level)
+    def _account_for(self, key: str, batch_size: int, level: int,
+                     staleness: int = 0) -> simulation.ServingResult:
+        # Admission estimates price conservatively at staleness=0 (the
+        # fresh synchronous exchange); only the serving path passes the
+        # batch's actual staleness, which drops the K*delta sync term.
+        ck = (key, batch_size, level, bool(staleness))
         res = self._svc_cache.get(ck)
         if res is None:
             res = self._session_for(level).account(key,
-                                                   batch_size=batch_size)
+                                                   batch_size=batch_size,
+                                                   staleness=staleness)
             self._svc_cache[ck] = res
         return res
 
@@ -615,8 +638,22 @@ class Server:
         b = len(batch)
         key = self._exec_key(batch[0])
         backend = sess.resolve_executor(batch[0].executor)
+        # Numerics first: per-request compressor round-trip, then ONE
+        # stacked [B, V, F] array handed to the session's batched execute
+        # (bit-identical to serial Session.query — asserted in
+        # tests/test_server.py and tests/test_batched_exec.py). Routing
+        # through the session lets a cache-enabled session serve the
+        # whole micro-batch with one stacked dirty-frontier pass, and
+        # resolves this batch's staleness under the stale-tolerant halo
+        # policy — which the accounting below depends on (a stale serve
+        # skips the K*delta sync round and ships zero exchange bytes).
+        collected = np.stack([np.asarray(sess.collect(r.features),
+                                         np.float32) for r in batch])
+        embs = sess.execute_many(collected, executor=backend)
+        staleness = int(getattr(sess, "last_staleness", 0))
+        xbytes = sess.exchange_bytes(backend)
         # Accounting: one batched collect + one batched executor run.
-        res = self._account_for(key, b, level)
+        res = self._account_for(key, b, level, staleness=staleness)
         c_t = float(res.collect.max())
         e_t = res.total_latency - c_t
         sched = simulation.pipeline_schedule(
@@ -625,16 +662,6 @@ class Server:
         self._pipe_state = simulation.schedule_state(sched)
         if self.batch_controller is not None:
             self.batch_controller.observe(b, c_t + e_t)
-        # Numerics: per-request compressor round-trip, then ONE stacked
-        # [B, V, F] array handed to the session's batched execute
-        # (bit-identical to serial Session.query — asserted in
-        # tests/test_server.py and tests/test_batched_exec.py). Routing
-        # through the session lets a cache-enabled session serve the
-        # whole micro-batch with one stacked dirty-frontier pass.
-        collected = np.stack([np.asarray(sess.collect(r.features),
-                                         np.float32) for r in batch])
-        embs = sess.execute_many(collected, executor=backend)
-        xbytes = sess.exchange_bytes(backend)
         batch_index = self.num_batches
         self.num_batches += 1
         out = []
@@ -662,7 +689,7 @@ class Server:
                 deadline=deadline,
                 deadline_met=(None if deadline is None
                               else bool(latency <= deadline + 1e-9)),
-                degradation=level))
+                degradation=level, staleness=staleness))
             sess.tick()   # per-request adapt_every accounting (step 5)
         if sess.adapt_every:
             self._svc_cache.clear()   # adaptation may have moved placement
@@ -671,7 +698,9 @@ class Server:
     # -- reporting ----------------------------------------------------------
 
     @staticmethod
-    def summarize(responses: Sequence[Response]) -> Dict[str, object]:
+    def summarize(responses: Sequence[Response],
+                  sites: Optional[Sequence[str]] = None
+                  ) -> Dict[str, object]:
         """Trace-level metrics for a batch of responses.
 
         Mixed traces are fine: ``UpdateResponse`` entries are counted as
@@ -682,13 +711,26 @@ class Server:
         rejections over deadline-carrying requests plus rejections; and
         ``priority_classes`` breaks requests / rejections / p95 / miss
         rate out per priority class.
+
+        When any response carries a fleet ``site`` (or ``sites`` lists
+        names to always report, so a down site with zero served requests
+        still appears), the summary grows a per-site breakdown —
+        served/spilled/failed-over counts, per-site p95 (None for an
+        empty site) and a staleness histogram — plus a fleet-wide
+        ``staleness_histogram``.
         """
         rejected = [r for r in responses if isinstance(r, Rejection)]
         updates = [r for r in responses if isinstance(r, UpdateResponse)]
         responses = [r for r in responses if isinstance(r, Response)]
         if not responses:
-            return {"requests": 0, "updates": len(updates),
-                    "rejected": len(rejected)}
+            out = {"requests": 0, "updates": len(updates),
+                   "rejected": len(rejected)}
+            if sites:
+                out["sites"] = {s: {"served": 0, "spilled": 0,
+                                    "failed_over": 0, "latency_p95_s": None,
+                                    "staleness_histogram": {}}
+                                for s in sites}
+            return out
         lat = np.array([r.latency for r in responses])
         fin = max(r.finish_time for r in responses)
         t0 = min(r.arrival_time for r in responses)
@@ -714,9 +756,41 @@ class Server:
                 "goodput_rps": (len(rs) - miss) / max(makespan, 1e-12),
             }
 
+        def _hist(rs: Sequence[Response]) -> Dict[str, int]:
+            h: Dict[int, int] = {}
+            for r in rs:
+                h[r.staleness] = h.get(r.staleness, 0) + 1
+            return {str(k): h[k] for k in sorted(h)}
+
+        def _site_stats(name: str) -> Dict[str, object]:
+            rs = [r for r in responses if r.site == name]
+            return {
+                "served": len(rs),
+                "spilled": sum(1 for r in rs if r.route == "spilled"),
+                "failed_over": sum(1 for r in rs
+                                   if r.route == "failed_over"),
+                # Guard: a site that served nothing (down the whole
+                # trace) has no percentile to report.
+                "latency_p95_s": (float(np.percentile(
+                    [r.latency for r in rs], 95)) if rs else None),
+                "staleness_histogram": _hist(rs),
+            }
+
+        site_names = sorted({r.site for r in responses
+                             if r.site is not None}
+                            | set(sites or ()))
         prios = sorted({r.priority for r in responses}
                        | {r.priority for r in rejected})
+        fleet_extra: Dict[str, object] = {}
+        if site_names:
+            fleet_extra = {
+                "sites": {s: _site_stats(s) for s in site_names},
+                "staleness_histogram": _hist(responses),
+                "routing_delay_mean_s": float(np.mean(
+                    [r.routing_delay for r in responses])),
+            }
         return {
+            **fleet_extra,
             "requests": len(responses),
             "updates": len(updates),
             "rejected": len(rejected),

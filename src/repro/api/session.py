@@ -61,6 +61,33 @@ class QueryResult:
     accuracy: Optional[float] = None
 
 
+class _HaloStore:
+    """Recorded halo tables for stale-tolerant serving (halo_async).
+
+    After a fresh serve the session records every layer's boundary-row
+    table (``bsp.build_halo_tables``); up to ``bound`` subsequent serves
+    may replay them instead of stalling the BSP superstep on the
+    exchange. ``age`` counts serves since the recording pass;
+    ``revision`` pins the graph fingerprint the tables were built under
+    (any mismatch forces a fresh serve). ``tables`` is None (cold), a
+    list of per-layer arrays (mesh backend), or the empty-tuple marker
+    for single-program backends — which have no real exchange to skip,
+    so only the version/staleness accounting applies.
+    """
+    __slots__ = ("bound", "tables", "age", "revision")
+
+    def __init__(self, bound: int):
+        self.bound = int(bound)
+        self.tables = None
+        self.age = 0
+        self.revision = None
+
+    def invalidate(self) -> None:
+        self.tables = None
+        self.age = 0
+        self.revision = None
+
+
 class Session:
     """Live serving handle for one Plan: ``query``, ``update``, ``adapt``.
 
@@ -99,7 +126,8 @@ class Session:
                  seed: Optional[int] = None,
                  updates: str = "sync",
                  activation_cache: bool = False,
-                 frontier_max_fraction: float = 0.25):
+                 frontier_max_fraction: float = 0.25,
+                 staleness_bound: Optional[int] = None):
         if updates not in ("sync", "deferred"):
             raise ValueError(f"updates must be 'sync' or 'deferred', "
                              f"got {updates!r}")
@@ -151,6 +179,30 @@ class Session:
             for f in plan.fogs]
         self.num_queries = 0
         self._partitioned = plan.partitioned  # valid for the initial layout
+        # Stale-tolerant serving (exchange="halo_async"): the session may
+        # replay recorded halo tables for up to staleness_bound serves
+        # after a fresh synchronous pass. bound=0 (the default) keeps the
+        # store off entirely — every serve runs the fresh path, which for
+        # halo_async is the cached "halo" program (bit-identical).
+        bound = (cfg.staleness_bound if staleness_bound is None
+                 else int(staleness_bound))
+        if bound < 0:
+            raise ValueError(f"staleness_bound must be >= 0, got {bound}")
+        if bound > 0 and not getattr(self._exchange, "stale_tolerant",
+                                     False):
+            raise ValueError(
+                f"staleness_bound={bound} needs a stale-tolerant exchange "
+                f"(e.g. 'halo_async'), got {self._exchange.name!r}")
+        if bound > 0 and activation_cache:
+            raise ValueError(
+                "activation_cache and staleness_bound > 0 are mutually "
+                "exclusive: the incremental frontier path assumes every "
+                "serve's exchange is fresh")
+        self._halo = _HaloStore(bound) if bound > 0 else None
+        #: staleness (in serves since the last fresh exchange) of the most
+        #: recent execute: 0 = fresh/synchronous. Recorded per response by
+        #: the Server/FleetServer front-ends.
+        self.last_staleness = 0
         self._acache = (_frontier.ActivationCache(frontier_max_fraction)
                         if activation_cache else None)
         #: QueryFrontier of the last query when it took the incremental
@@ -226,6 +278,10 @@ class Session:
         if self._acache is not None:
             return self._cached_execute(np.asarray(feats, np.float32),
                                         backend)
+        if self._halo is not None:
+            return self._stale_execute(np.asarray(feats, np.float32),
+                                       backend, many=False)
+        self.last_staleness = 0
         return backend.run(self.plan, feats, self.state.placement.assignment,
                            self.partitioned(backend), self._exchange.name,
                            aggregation=self._aggregation)
@@ -245,6 +301,9 @@ class Session:
             feats = np.stack([np.asarray(f, np.float32) for f in feats])
         feats = np.asarray(feats, np.float32)
         if self._acache is None:
+            if self._halo is not None:
+                return self._stale_execute(feats, backend, many=True)
+            self.last_staleness = 0
             return backend.run_many(
                 self.plan, feats, self.state.placement.assignment,
                 self.partitioned(backend), self._exchange.name,
@@ -252,6 +311,74 @@ class Session:
         if feats.shape[0] == 1:
             return [self._cached_execute(feats[0], backend)]
         return self._cached_execute(feats, backend)
+
+    def _stale_execute(self, feats: np.ndarray, backend: ExecutorBackend,
+                       many: bool):
+        """Serve one execute under the stale-tolerant halo policy.
+
+        A serve is stale when tables are recorded for the current graph
+        revision and the store is younger than the bound: the mesh
+        backend then replays the recorded boundary rows with NO per-layer
+        collective (local rows still read the CURRENT query features),
+        single-program backends serve plainly (they have no exchange to
+        skip; the accounting is identical). Otherwise the serve is fresh:
+        the mesh backend runs a capturing pass and the per-layer INPUT
+        activations become the next tables.
+        """
+        store = self._halo
+        plan = self.plan
+        assign = self.state.placement.assignment
+        pg = self.partitioned(backend)
+        agg = self._aggregation
+        revision = ops.graph_fingerprint(plan.graph)
+        mesh = backend.supports_stale_halo(plan, agg)
+        recorded = (store.tables is not None
+                    and (store.tables != () if mesh
+                         else store.tables == ()))
+        if (recorded and store.revision == revision
+                and store.age + 1 <= store.bound):
+            store.age += 1
+            self.last_staleness = store.age
+            if not mesh:
+                # Single-program numerics: no exchange, plain serve.
+                if many:
+                    return backend.run_many(plan, feats, assign, pg,
+                                            self._exchange.name,
+                                            aggregation=agg)
+                return backend.run(plan, feats, assign, pg,
+                                   self._exchange.name, aggregation=agg)
+            if many:
+                return backend.run_stale_many(plan, feats, assign, pg,
+                                              store.tables,
+                                              aggregation=agg)
+            return backend.run_stale(plan, feats, assign, pg, store.tables,
+                                     aggregation=agg)
+        # Fresh serve: run synchronously and (re)record the tables.
+        store.age = 0
+        store.revision = revision
+        self.last_staleness = 0
+        if not mesh:
+            store.tables = ()   # marker: accounting only, nothing to replay
+            if many:
+                return backend.run_many(plan, feats, assign, pg,
+                                        self._exchange.name,
+                                        aggregation=agg)
+            return backend.run(plan, feats, assign, pg,
+                               self._exchange.name, aggregation=agg)
+        layers = backend.run_layers(plan, feats, assign, pg,
+                                    self._exchange.name, aggregation=agg)
+        # Layer l's halo table holds layer l's INPUT activations (the
+        # features for l=0); a stacked batch records the LAST example,
+        # matching the activation cache's merge convention.
+        if many:
+            inputs = [feats[-1]] + [np.asarray(a[-1])
+                                    for a in layers[:-1]]
+        else:
+            inputs = [feats] + [np.asarray(a) for a in layers[:-1]]
+        store.tables = bsp.build_halo_tables(pg, inputs)
+        if many:
+            return [np.asarray(e) for e in layers[-1]]
+        return np.asarray(layers[-1])
 
     def _cached_execute(self, feats: np.ndarray, backend: ExecutorBackend):
         """Serve one execute through the activation cache.
@@ -321,28 +448,43 @@ class Session:
         cache.populate(feats, layers, revision, mode, family)
         return np.asarray(layers[-1])
 
-    def account(self, executor=None, *,
-                batch_size: int = 1) -> simulation.ServingResult:
+    def account(self, executor=None, *, batch_size: int = 1,
+                staleness: Optional[int] = None) -> simulation.ServingResult:
         """Stage 3: simulated latency pricing for the current placement.
 
         ``batch_size`` prices a micro-batch of coalesced queries (used by
-        the Server front-end; 1 = one query).
+        the Server front-end; 1 = one query). ``staleness`` prices the
+        serve's exchange mode: a stale halo_async serve (staleness > 0)
+        never stalls a superstep on the exchange, so the K*delta sync
+        term drops out of the multi-fog pipeline (``sync_scale=0``);
+        None reads the session's ``last_staleness``.
         """
         backend = self.resolve_executor(executor)
+        if staleness is None:
+            staleness = self.last_staleness
+        scale = 0.0 if staleness else 1.0
         return simulation.simulate(backend.pipeline, self.plan.cluster,
                                    self.state.placement,
                                    compress=self._compressor.sim_key,
-                                   batch_size=batch_size)
+                                   batch_size=batch_size,
+                                   sync_scale=scale)
 
-    def exchange_bytes(self, executor=None) -> int:
+    def exchange_bytes(self, executor=None, *,
+                       staleness: Optional[int] = None) -> int:
         """Per-BSP-sync collective payload (0 off the multi-fog pipeline).
 
         Accounts for the wire format the backend actually ships: float32
         rows on the segment-sum path, uint8 codes + one (scale, min) pair
         per row when the mesh backend's DAQ-fused kernel path is active.
+        A stale halo_async serve replays recorded tables and ships
+        NOTHING over the wire (``staleness`` as in ``account``).
         """
         backend = self.resolve_executor(executor)
         if backend.pipeline != "multi":
+            return 0
+        if staleness is None:
+            staleness = self.last_staleness
+        if staleness:
             return 0
         dtype_bytes, row_overhead = backend.wire_format(
             self.plan, self._exchange.name, self._aggregation)
@@ -488,6 +630,11 @@ class Session:
                     self._acache.apply_update(fu, revision=rev)
                 else:
                     self._acache.clear()
+        if self._halo is not None:
+            # An applied update bumps the data version: recorded halo
+            # tables predate it (and the repair may have changed the
+            # partition layout), so the next serve must be fresh.
+            self._halo.invalidate()
         self.plan = plan2
         self.state.placement = dataclasses.replace(
             plan2.placement,
@@ -519,6 +666,9 @@ class Session:
             replan_partitioner=PARTITIONERS.resolve(plan.config.partitioner))
         if not np.array_equal(before, self.state.placement.assignment):
             self._partitioned = None  # layout changed: invalidate buffers
+            if self._halo is not None:
+                # Recorded tables are laid out per the old partitioning.
+                self._halo.invalidate()
             if self._acache is not None and self._acache.family == "mesh":
                 # Mesh-family cached tables were produced under the old
                 # partition's halo layout; single-program numerics are

@@ -360,3 +360,36 @@ def slo_classes(classes: Sequence[Tuple[float, int, Optional[float]]]):
         return deadline, int(priority)
 
     return slo_fn
+
+
+# ----------------------------------------------------------------------------
+# Per-site policies (the fleet front-end, repro.api.fleet)
+# ----------------------------------------------------------------------------
+
+
+def per_site(default: Optional[SLOPolicy] = None,
+             **overrides: Optional[SLOPolicy]) -> Dict[str, object]:
+    """Build a per-site SLO policy table for ``FleetServer(slo=...)``.
+
+    Keyword arguments map site names (including the ``"cloud"`` tier) to
+    their :class:`SLOPolicy`; every other site serves under ``default``
+    (None = that site runs without a control plane). Typical shape: a
+    tight edge-side deadline with a laxer cloud fallback::
+
+        slo.per_site(SLOPolicy(default_deadline=0.5),
+                     cloud=SLOPolicy(default_deadline=2.0))
+
+    The FleetServer validates the names against its site table at
+    construction, so a typo'd site fails fast instead of silently serving
+    policy-free.
+    """
+    for name, pol in overrides.items():
+        if pol is not None and not isinstance(pol, SLOPolicy):
+            raise TypeError(f"per-site policy {name!r} must be an SLOPolicy "
+                            f"or None, got {type(pol).__name__}")
+    if default is not None and not isinstance(default, SLOPolicy):
+        raise TypeError(f"default must be an SLOPolicy or None, got "
+                        f"{type(default).__name__}")
+    table: Dict[str, object] = {"default": default}
+    table.update(overrides)
+    return table

@@ -26,10 +26,17 @@ trace with one latency budget and class rank, or ``slo_fn(i, rng) ->
 ``repro.api.slo.slo_classes`` for a weighted mix of service classes.
 ``slo_fn`` wins over the scalar kwargs; in ``mixed`` traces it annotates
 updates too.
+
+Geo annotations (read by the fleet router, ``repro.api.fleet``): every
+generator takes ``origin_fn(i) -> (lat, lon)`` to stamp per-request geo
+coordinates — :func:`geo_origins` builds one from site centroids with a
+zipfian site-popularity mixer. ``origin_fn`` owns its own RNG stream, so
+the default (None) keeps every existing trace byte-identical: the shared
+generator's feature/SLO draws are never perturbed.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -40,6 +47,46 @@ FeaturesFn = Callable[[int, np.random.Generator], Optional[np.ndarray]]
 DeltaFn = Callable[[int, np.random.Generator], GraphDelta]
 #: (index, rng) -> (deadline seconds or None, priority)
 SloFn = Callable[[int, np.random.Generator], Tuple[Optional[float], int]]
+#: index -> (lat, lon); owns its own RNG stream (see geo_origins) so the
+#: generators' shared feature/SLO draws stay untouched.
+OriginFn = Callable[[int], Tuple[float, float]]
+
+
+def geo_origins(centroids: Sequence[Tuple[float, float]], *,
+                spread: float = 0.3, zipf_s: float = 1.0,
+                seed: int = 0) -> OriginFn:
+    """Build an ``origin_fn`` sampling request coordinates around site
+    centroids with zipfian site popularity.
+
+    ``centroids`` is a sequence of ``(lat, lon)`` site centers (e.g. the
+    fleet's site locations, in listed order). Each request first draws a
+    site with probability proportional to ``1 / rank^zipf_s`` (rank =
+    1-based centroid position, so earlier sites are more popular;
+    ``zipf_s=0`` is uniform), then scatters around that centroid with
+    isotropic gaussian noise of ``spread`` degrees — the geo-skewed
+    arrival mix a fleet router sees from real IoT deployments.
+
+    The returned function owns a private RNG seeded from ``seed``:
+    attaching origins to a trace never changes its arrivals, features or
+    SLO annotations.
+    """
+    cents = [(float(lat), float(lon)) for lat, lon in centroids]
+    if not cents:
+        raise ValueError("centroids must be non-empty")
+    if spread < 0:
+        raise ValueError(f"spread must be >= 0, got {spread}")
+    ranks = np.arange(1, len(cents) + 1, dtype=float)
+    weights = ranks ** -float(zipf_s)
+    probs = weights / weights.sum()
+    rng = np.random.default_rng(seed)
+
+    def origin_fn(i: int) -> Tuple[float, float]:
+        j = int(rng.choice(len(cents), p=probs))
+        lat, lon = cents[j]
+        dlat, dlon = rng.normal(0.0, spread, size=2)
+        return (lat + dlat, lon + dlon)
+
+    return origin_fn
 
 
 def _slo_of(i: int, rng: np.random.Generator, slo_fn: Optional[SloFn],
@@ -54,16 +101,22 @@ def _slo_of(i: int, rng: np.random.Generator, slo_fn: Optional[SloFn],
 def _build(arrivals: np.ndarray, features_fn: Optional[FeaturesFn],
            rng: np.random.Generator, executor: Optional[str],
            deadline: Optional[float] = None, priority: int = 0,
-           slo_fn: Optional[SloFn] = None) -> List[Request]:
+           slo_fn: Optional[SloFn] = None,
+           origin_fn: Optional[OriginFn] = None) -> List[Request]:
     out = []
     for i, t in enumerate(np.asarray(arrivals, float)):
         feats = None if features_fn is None else features_fn(i, rng)
         d, p = _slo_of(i, rng, slo_fn, deadline, priority)
+        # origin_fn draws from its OWN rng (geo_origins), never from the
+        # shared one: a trace with origins attached is the byte-identical
+        # trace plus coordinates.
+        origin = None if origin_fn is None else tuple(origin_fn(i))
         # request_id stays None: the Server assigns ids at submit() in
         # submission order, so they stay unique even when one server
         # replays several traces back to back.
         out.append(Request(features=feats, arrival_time=float(t),
-                           executor=executor, deadline=d, priority=p))
+                           executor=executor, deadline=d, priority=p,
+                           origin=origin))
     return out
 
 
@@ -72,6 +125,7 @@ def poisson(n: int, rate: float, *, seed: int = 0,
             executor: Optional[str] = None,
             deadline: Optional[float] = None, priority: int = 0,
             slo_fn: Optional[SloFn] = None,
+            origin_fn: Optional[OriginFn] = None,
             start: float = 0.0) -> List[Request]:
     """``n`` Poisson arrivals at ``rate`` req/s (exponential gaps)."""
     if rate <= 0:
@@ -79,7 +133,7 @@ def poisson(n: int, rate: float, *, seed: int = 0,
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n)
     return _build(start + np.cumsum(gaps), features_fn, rng, executor,
-                  deadline, priority, slo_fn)
+                  deadline, priority, slo_fn, origin_fn)
 
 
 def constant(n: int, rate: float, *, seed: int = 0,
@@ -87,13 +141,14 @@ def constant(n: int, rate: float, *, seed: int = 0,
              executor: Optional[str] = None,
              deadline: Optional[float] = None, priority: int = 0,
              slo_fn: Optional[SloFn] = None,
+             origin_fn: Optional[OriginFn] = None,
              start: float = 0.0) -> List[Request]:
     """``n`` deterministic arrivals spaced exactly ``1/rate`` apart."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     rng = np.random.default_rng(seed)
     return _build(start + np.arange(1, n + 1) / rate, features_fn, rng,
-                  executor, deadline, priority, slo_fn)
+                  executor, deadline, priority, slo_fn, origin_fn)
 
 
 def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
@@ -101,6 +156,7 @@ def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
            executor: Optional[str] = None,
            deadline: Optional[float] = None, priority: int = 0,
            slo_fn: Optional[SloFn] = None,
+           origin_fn: Optional[OriginFn] = None,
            start: float = 0.0) -> List[Request]:
     """``n`` arrivals in bursts of ~``burst`` near-simultaneous requests.
 
@@ -116,7 +172,7 @@ def bursty(n: int, rate: float, *, burst: int = 4, jitter: float = 0.01,
     base = start + (np.arange(n) // burst + 1) * (burst / rate)
     arrivals = np.sort(base + rng.exponential(jitter, size=n))
     return _build(arrivals, features_fn, rng, executor, deadline, priority,
-                  slo_fn)
+                  slo_fn, origin_fn)
 
 
 def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
@@ -125,6 +181,7 @@ def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
           executor: Optional[str] = None,
           deadline: Optional[float] = None, priority: int = 0,
           slo_fn: Optional[SloFn] = None,
+          origin_fn: Optional[OriginFn] = None,
           start: float = 0.0) -> List[Union[Request, UpdateRequest]]:
     """``n`` Poisson arrivals; each is a graph update with probability
     ``update_fraction`` (its ``GraphDelta`` built by ``delta_fn(i, rng)``),
@@ -153,6 +210,8 @@ def mixed(n: int, rate: float, *, delta_fn: DeltaFn,
                                      deadline=d, priority=p))
         else:
             feats = None if features_fn is None else features_fn(i, rng)
+            origin = None if origin_fn is None else tuple(origin_fn(i))
             out.append(Request(features=feats, arrival_time=float(t),
-                               executor=executor, deadline=d, priority=p))
+                               executor=executor, deadline=d, priority=p,
+                               origin=origin))
     return out

@@ -272,7 +272,8 @@ def simulate_single_fog(cluster: FogCluster, *,
 
 def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
                        compress: Optional[str] = None,
-                       batch_size: int = 1) -> ServingResult:
+                       batch_size: int = 1,
+                       sync_scale: float = 1.0) -> ServingResult:
     """Distributed BSP serving under a data placement (straw-man or IEP).
 
     Latency = max_j (collect_j + exec_j) + K*delta sync (Eq. 6/7); unpack is
@@ -286,7 +287,15 @@ def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
     batched BSP superstep whose per-layer synchronizations carry all B
     feature sets, so the K*delta sync cost is paid once per batch instead
     of once per query.
+
+    ``sync_scale`` scales the K*delta per-layer synchronization term: a
+    stale-tolerant ``halo_async`` serve that replays recorded halo tables
+    never stalls a superstep on the exchange, so it is priced at
+    ``sync_scale=0.0`` (the whole point of the mode on WAN-separated
+    sites); 1.0 is the synchronous exchange.
     """
+    if not 0.0 <= sync_scale <= 1.0:
+        raise ValueError(f"sync_scale must be in [0, 1], got {sync_scale}")
     compress = _norm_compress(compress)
     b = int(batch_size)
     g = cluster.graph
@@ -305,7 +314,7 @@ def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
         collect[j] = (wire / bw + (QUANTIZE_OVERHEAD_S if compress else 0.0)
                       + LAN_TAIL_S * np.log(max(b * len(mine), 2)))
         exec_t[j] = (b * cluster.ground_truth_exec(node, mine)
-                     + cluster.k_layers * cluster.sync_cost)
+                     + sync_scale * cluster.k_layers * cluster.sync_cost)
         unpack[j] = wire / DECOMPRESS_BYTES_PER_S if compress else 0.0
         # Pipelined unpack: only the part not hidden by execution adds.
         exec_t[j] += max(0.0, unpack[j] - exec_t[j]) * 0.0
@@ -319,14 +328,18 @@ def simulate_multi_fog(cluster: FogCluster, placement: Placement, *,
 def simulate(pipeline: str, cluster: FogCluster,
              placement: Optional[Placement] = None, *,
              compress: Optional[str] = None,
-             batch_size: int = 1) -> ServingResult:
+             batch_size: int = 1,
+             sync_scale: float = 1.0) -> ServingResult:
     """Dispatch the latency accounting for one serving pipeline.
 
     ``pipeline``: "cloud", "single" (most powerful fog) or "multi"
     (distributed BSP under ``placement``). Executor backends resolve their
     accounting through this single entry point. ``batch_size`` prices a
     micro-batch of coalesced queries (B=1 is one query and reproduces the
-    unbatched numbers exactly).
+    unbatched numbers exactly). ``sync_scale`` scales the multi-fog
+    pipeline's K*delta sync term (0.0 for a stale ``halo_async`` serve —
+    no superstep stalls on the exchange); the single/cloud pipelines have
+    no BSP sync and ignore it.
     """
     if batch_size < 1:
         raise ValueError(f"batch_size must be >= 1, got {batch_size}")
@@ -340,7 +353,8 @@ def simulate(pipeline: str, cluster: FogCluster,
         if placement is None:
             raise ValueError("pipeline 'multi' needs a placement")
         return simulate_multi_fog(cluster, placement, compress=compress,
-                                  batch_size=batch_size)
+                                  batch_size=batch_size,
+                                  sync_scale=sync_scale)
     raise ValueError(f"unknown pipeline {pipeline!r}; "
                      "available: cloud, multi, single")
 

@@ -13,10 +13,18 @@ TPU/JAX adaptation: fogs = devices along a ``fog`` mesh axis, executed with
     other partition reads), packed into a [B, F] buffer (B = max boundary
     size). This is the paper's "exchange vertices data when needed",
     and the §Perf knob for the collective roofline term.
+  * ``"halo_async"`` — the stale-tolerant variant for WAN-separated fleet
+    sites: a *fresh* serve runs the exact ``"halo"`` program (same cached
+    shard_map program, bit for bit) while the per-layer gathered halo
+    tables are recorded host-side (``build_halo_tables``); a *stale* serve
+    (``bsp_infer_stale`` / ``bsp_infer_stale_many``) replays those tables
+    as replicated operands instead of stalling the superstep on a live
+    collective — local rows always read CURRENT features, only
+    cross-partition reads may be up to ``staleness_bound`` versions old.
 
-Both produce identical results; tests assert equality against single-device
-execution. Per-partition buffers are padded to common static shapes so the
-whole computation jits once.
+All synchronous modes produce identical results; tests assert equality
+against single-device execution. Per-partition buffers are padded to common
+static shapes so the whole computation jits once.
 
 Shard-local aggregation runs on one of two numerically equivalent paths,
 selected by the ``aggregation`` knob (plumbed from ``Engine`` through the
@@ -103,14 +111,17 @@ def resolve_aggregation(mode: str, kind: str, *,
     if mode not in AGGREGATIONS:
         raise ValueError(f"unknown aggregation {mode!r}; available: "
                          f"{', '.join(AGGREGATIONS)}")
-    supported = kind in KERNEL_KINDS and exchange in (None, "halo")
+    # halo_async serves (fresh or stale) read the same halo-table row space
+    # the block-CSR shards are built over, so the kernel path applies.
+    supported = (kind in KERNEL_KINDS
+                 and exchange in (None, "halo", "halo_async"))
     if mode == "pallas":
         if kind not in KERNEL_KINDS:
             raise ValueError(
                 f"aggregation='pallas' supports kinds {KERNEL_KINDS} "
                 f"(static-sum aggregation); {kind!r} re-weights edges per "
                 f"layer — use aggregation='segment_sum' or 'auto'")
-        if exchange is not None and exchange != "halo":
+        if exchange is not None and exchange not in ("halo", "halo_async"):
             raise ValueError(
                 "aggregation='pallas' requires the 'halo' exchange (the "
                 f"block-CSR shards are built over the halo table), got "
@@ -120,6 +131,14 @@ def resolve_aggregation(mode: str, kind: str, *,
         return "segment_sum"
     on_tpu = jax.default_backend() == "tpu"
     return "pallas" if (supported and on_tpu) else "segment_sum"
+
+
+def _wire_exchange(exchange: str) -> str:
+    """The synchronous program behind an exchange mode.  ``halo_async``'s
+    fresh path IS the ``halo`` program (same ``_program_key``, same cached
+    shard_map program), which is what makes its ``staleness_bound=0`` mode
+    bit-identical to the synchronous exchange by construction."""
+    return "halo" if exchange == "halo_async" else exchange
 
 
 @dataclasses.dataclass
@@ -500,6 +519,7 @@ def bsp_apply(params, kind: str, pg: PartitionedGraph, mesh: Mesh,
     """
     _, layer_fn = LAYER_FNS[kind]
     mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+    exchange = _wire_exchange(exchange)
     use_kernels = mode == "pallas"
     if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
         raise ValueError(
@@ -661,6 +681,7 @@ def bsp_apply_many(params, kind: str, pg: PartitionedGraph,
     """
     _, layer_fn = LAYER_FNS[kind]
     mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+    exchange = _wire_exchange(exchange)
     use_kernels = mode == "pallas"
     if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
         raise ValueError(
@@ -820,6 +841,7 @@ def _bsp_apply_layers(params, kind: str, pg: PartitionedGraph, feats_op,
     """
     _, layer_fn = LAYER_FNS[kind]
     mode = resolve_aggregation(aggregation, kind, exchange=exchange)
+    exchange = _wire_exchange(exchange)
     use_kernels = mode == "pallas"
     frontier = dirty is not None
     if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
@@ -1079,6 +1101,203 @@ def bsp_infer_capture_many(params, kind: str, feats: np.ndarray,
     return [pg.unpermute_stack(np.asarray(o)) for o in outs]
 
 
+def build_halo_tables(pg: PartitionedGraph, layer_inputs) -> List[np.ndarray]:
+    """Pre-gathered per-layer halo tables for the stale-serve path.
+
+    ``layer_inputs[l]`` is the [V, F_l] table of layer ``l``'s INPUT
+    activations in original vertex order — layer 0's input is the raw
+    feature matrix, layer ``l>0``'s input is layer ``l-1``'s output (e.g.
+    from ``bsp_infer_capture``).  Returns K ``[n*B, F_l]`` tables laid out
+    exactly like the synchronous exchange's
+    ``all_gather(h[br] * bm[:, None]).reshape(-1, f)``: row ``p*B + i``
+    carries partition ``p``'s i-th boundary row times its mask, padded
+    rows zero.  Pure data movement through part_of/slot_of (no
+    arithmetic), so replaying a table built from the same activations the
+    fresh exchange shipped reproduces that exchange bit for bit.
+    """
+    tables = []
+    brows = pg.boundary_rows.astype(np.int64)
+    for act in layer_inputs:
+        act = np.asarray(act, np.float32)
+        f = act.shape[-1]
+        shard = np.zeros((pg.n, pg.slots, f), np.float32)
+        shard[pg.part_of, pg.slot_of] = act
+        rows = np.take_along_axis(shard, brows[:, :, None], axis=1)
+        rows = rows * pg.boundary_mask[:, :, None]
+        tables.append(np.ascontiguousarray(
+            rows.reshape(pg.n * pg.boundary_slots, f)))
+    return tables
+
+
+def _bsp_apply_stale(params, kind: str, pg: PartitionedGraph, feats_op,
+                     halo_tables, mesh: Mesh, axis: str = "fog",
+                     aggregation: str = "segment_sum", many: bool = False):
+    """The ``halo_async`` stale serve: cross-partition reads come from the
+    pre-gathered per-layer ``halo_tables`` (replicated operands) instead of
+    a live per-layer collective, so no superstep stalls on the WAN.  Local
+    rows always read the CURRENT features in ``feats_op``; only the halo
+    rows are stale.  ``halo_quant`` does not apply — nothing crosses the
+    wire.  Returns [n, (B,) P, D] device outputs like the plain programs.
+    """
+    _, layer_fn = LAYER_FNS[kind]
+    mode = resolve_aggregation(aggregation, kind, exchange="halo_async")
+    use_kernels = mode == "pallas"
+    if use_kernels and (pg.local_csr is None or pg.halo_csr is None):
+        raise ValueError(
+            "aggregation='pallas' needs the block-CSR shards; rebuild the "
+            "PartitionedGraph with build_partitioned(..., build_blocks=True)")
+    if len(halo_tables) != len(params):
+        raise ValueError(
+            f"stale serve needs one halo table per layer: got "
+            f"{len(halo_tables)} tables for {len(params)} layers")
+    interpret = jax.default_backend() != "tpu"
+    # Bind layout statics to locals (never close over pg — see bsp_apply).
+    slots = pg.slots
+    local_rows = None if pg.local_csr is None else pg.local_csr.src_rows
+    halo_rows = None if pg.halo_csr is None else pg.halo_csr.src_rows
+
+    def shard_fn(params, halos, feats, vmask, s_g, s_h, recv, emask, brows,
+                 bmask, self_g, self_h, *kops):
+        nlayers = len(params)
+        h = feats[0]                               # [P, F] or [B, P, F]
+        vm, sh = vmask[0], s_h[0]
+        rc, em = recv[0], emask[0]
+        selh = self_h[0]
+        if use_kernels:
+            lblk, lcol, lmsk, hblk, hcol, hmsk = (a[0] for a in kops)
+        for li, p in enumerate(params):
+            act_last = li == nlayers - 1
+            kwargs = {}
+            stale = halos[li]                      # [n*B, F_l] replicated
+            edges = _layer_edges(slots, sh, kind, selh, rc, em, vm)
+            if use_kernels:
+                f = h.shape[-1]
+                h_src = None
+                halo = _kernel_pad(stale, halo_rows)
+                if many:
+                    halo = jnp.broadcast_to(halo, (h.shape[0],) + halo.shape)
+
+                    def halo_agg(_f=f, _h=halo):
+                        return block_spmm_batched(
+                            hblk, hcol, hmsk, _h,
+                            interpret=interpret)[:, :slots, :_f]
+
+                    def kernel_sum(h_loc, _f=f, _halo_agg=halo_agg):
+                        loc = _kernel_pad(h_loc, local_rows)
+                        out = block_spmm_batched(lblk, lcol, lmsk, loc,
+                                                 interpret=interpret)
+                        return out[:, :slots, :_f] + _halo_agg()
+                else:
+                    def halo_agg(_f=f, _h=halo):
+                        return block_spmm(hblk, hcol, hmsk, _h,
+                                          interpret=interpret)[:slots, :_f]
+
+                    def kernel_sum(h_loc, edges_, h_src_=None, _f=f,
+                                   _halo_agg=halo_agg):
+                        loc = _kernel_pad(h_loc, local_rows)
+                        out = block_spmm(lblk, lcol, lmsk, loc,
+                                         interpret=interpret)
+                        return out[:slots, :_f] + _halo_agg()
+            elif many:
+                h_src = jnp.concatenate(
+                    [h, jnp.broadcast_to(stale, (h.shape[0],) + stale.shape)],
+                    axis=1)
+            else:
+                h_src = jnp.concatenate([h, stale], axis=0)
+            if many:
+                if act_last:
+                    kwargs["activation"] = None
+                if use_kernels:
+                    h = apply_layer_with_sum(kind, p, h, edges,
+                                             kernel_sum(h), last=act_last)
+                else:
+                    h = jax.vmap(lambda hh, ss, _p=p, _kw=kwargs: layer_fn(
+                        _p, hh, edges, h_src=ss, **_kw))(h, h_src)
+            else:
+                if use_kernels:
+                    if kind == "sage":
+                        def kernel_agg(h_loc, edges_, h_src_=None,
+                                       _sum=kernel_sum):
+                            deg = masked_degree(edges_)
+                            return (_sum(h_loc, edges_, h_src_)
+                                    / jnp.maximum(deg, 1.0)[:, None])
+                    else:
+                        kernel_agg = kernel_sum
+                    kwargs["aggregate"] = kernel_agg
+                if act_last:
+                    h = layer_fn(p, h, edges, activation=None, h_src=h_src,
+                                 **kwargs)
+                else:
+                    h = layer_fn(p, h, edges, h_src=h_src, **kwargs)
+            h = h * vm[:, None]
+        return h[None]
+
+    spec = P(axis, None, None, None) if many else P(axis, None, None)
+    spec2 = P(axis, None)
+    # Params AND the stale halo tables ride as replicated operands (P()
+    # pytree-prefix specs) so the compiled program is reusable — see
+    # _PROGRAM_CACHE.  The tables are graph state shared by every shard
+    # and (in the batched program) every example.
+    in_specs = [P(), P(), spec, spec2, spec2, spec2, spec2, spec2, spec2,
+                spec2, spec2, spec2]
+    operands = [jnp.asarray(feats_op), jnp.asarray(pg.vertex_mask),
+                jnp.asarray(pg.senders_global), jnp.asarray(pg.senders_halo),
+                jnp.asarray(pg.receivers_local), jnp.asarray(pg.edge_mask),
+                jnp.asarray(pg.boundary_rows), jnp.asarray(pg.boundary_mask),
+                jnp.asarray(pg.self_senders_global),
+                jnp.asarray(pg.self_senders_halo)]
+    if use_kernels:
+        for csr in (pg.local_csr, pg.halo_csr):
+            for arr in (csr.blocks, csr.cols, csr.mask):
+                operands.append(jnp.asarray(arr))
+                in_specs.append(P(axis, *([None] * (arr.ndim - 1))))
+    smap_kw = {}
+    if use_kernels:
+        smap_kw["check_rep"] = False
+    tag = "stale_many" if many else "stale"
+    fn = _cached_program(
+        _program_key(tag, kind, pg, mesh, axis, "halo_async", use_kernels,
+                     False, interpret),
+        lambda: jax.jit(_shard_map(shard_fn, mesh=mesh,
+                                   in_specs=tuple(in_specs),
+                                   out_specs=spec, **smap_kw)))
+    tables = [jnp.asarray(t, jnp.float32) for t in halo_tables]
+    return fn(list(params), tables, *operands)
+
+
+def bsp_infer_stale(params, kind: str, feats: np.ndarray,
+                    pg: PartitionedGraph, halo_tables,
+                    mesh: Optional[Mesh] = None, axis: str = "fog",
+                    aggregation: str = "segment_sum") -> np.ndarray:
+    """Stale-halo distributed inference -> [V, D] in original vertex order.
+
+    ``feats`` are the CURRENT [V, F] features (local reads stay fresh);
+    ``halo_tables`` the recorded per-layer exchange payloads
+    (``build_halo_tables``) a bounded-staleness serve may replay.
+    """
+    pg = pg.with_features(np.asarray(feats, np.float32))
+    if mesh is None:
+        mesh = _default_mesh(pg, axis)
+    out = np.asarray(_bsp_apply_stale(params, kind, pg, pg.feats,
+                                      halo_tables, mesh, axis, aggregation))
+    return pg.unpermute(out)
+
+
+def bsp_infer_stale_many(params, kind: str, feats: np.ndarray,
+                         pg: PartitionedGraph, halo_tables,
+                         mesh: Optional[Mesh] = None, axis: str = "fog",
+                         aggregation: str = "segment_sum") -> np.ndarray:
+    """Batched stale-halo inference: [B, V, F] micro-batch -> [B, V, D];
+    every example shares the same recorded halo tables (graph state, not
+    per-request state)."""
+    stack = pg.feature_stack(np.asarray(feats, np.float32))
+    if mesh is None:
+        mesh = _default_mesh(pg, axis)
+    out = np.asarray(_bsp_apply_stale(params, kind, pg, stack, halo_tables,
+                                      mesh, axis, aggregation, many=True))
+    return pg.unpermute_stack(out)
+
+
 def _scatter_frontier(pg: PartitionedGraph, rows_per_layer, cached_layers):
     """Global frontier/cache state -> per-partition shard operands.
 
@@ -1218,15 +1437,25 @@ def exchange_bytes(pg: PartitionedGraph, feature_dim: int,
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeSpec:
-    """An EXCHANGES registry entry: one per-layer cross-fog exchange."""
+    """An EXCHANGES registry entry: one per-layer cross-fog exchange.
+
+    ``stale_tolerant`` marks modes whose serves may replay recorded halo
+    tables up to a staleness bound instead of running the collective
+    (``EngineConfig.staleness_bound`` only applies to those entries).
+    """
     name: str
+    stale_tolerant: bool = False
 
     def bytes_per_sync(self, pg: PartitionedGraph, feature_dim: int,
                        dtype_bytes: int = 4,
                        row_overhead_bytes: int = 0) -> int:
-        return exchange_bytes(pg, feature_dim, self.name, dtype_bytes,
-                              row_overhead_bytes)
+        """Wire bytes of one FRESH sync (a stale halo_async serve ships
+        zero bytes — it replays recorded tables)."""
+        return exchange_bytes(pg, feature_dim, _wire_exchange(self.name),
+                              dtype_bytes, row_overhead_bytes)
 
 
 EXCHANGES.register("halo", ExchangeSpec("halo"))
 EXCHANGES.register("allgather", ExchangeSpec("allgather"))
+EXCHANGES.register("halo_async", ExchangeSpec("halo_async",
+                                              stale_tolerant=True))

@@ -35,7 +35,8 @@ def test_registries_have_expected_keys():
     assert "bgp" in PARTITIONERS
     assert {"iep", "metis+greedy", "random"} <= set(PLACEMENTS.keys())
     assert {"daq", "uniform8", "none"} <= set(COMPRESSORS.keys())
-    assert set(EXCHANGES.keys()) == {"allgather", "halo"}
+    assert set(EXCHANGES.keys()) == {"allgather", "halo",
+                                 "halo_async"}
     assert {"sim", "single", "mesh-bsp", "cloud"} <= set(EXECUTORS.keys())
 
 

@@ -1,0 +1,495 @@
+"""Geo-distributed fleet serving: router, failover, staleness, checks.
+
+The load-bearing guarantees:
+  * the Router covers every site and routes nearest-first, spilling on
+    the capacity knob and failing over off down sites;
+  * a site going down mid-trace reroutes its queued work — zero drops;
+  * ``staleness_bound=0`` with ``exchange="halo_async"`` is bit-identical
+    to the synchronous ``halo`` exchange (sim in-process, mesh-bsp in a
+    subprocess), and bounded-stale outputs are exactly reproducible by
+    replaying the recorded halo-table versions through
+    ``bsp.bsp_infer_stale``;
+  * attaching geo origins never perturbs a trace's arrivals / features /
+    SLO draws (defaults stay byte-identical);
+  * the ``fleet.*`` analysis checks fire on mutation, stay silent on
+    healthy fleets.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisContext, run_checks
+from repro.api import Engine, traces
+from repro.api.fleet import CLOUD, FleetServer, Router, Site, haversine_km
+from repro.api.server import Response, Server
+from repro.api.slo import SLOPolicy, per_site
+from repro.api.updates import GraphDelta
+from repro.gnn import datasets, models
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SITES = {"north": (59.33, 18.07), "south": (48.21, 16.37),
+         "west": (51.51, -0.13)}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("siot", scale=0.06, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    eng = Engine((params, "gcn"), cluster="1A+2B",
+                 exchange="halo_async", staleness_bound=2)
+    return g, params, eng.compile_fleet(g, SITES)
+
+
+# ----------------------------------------------------------------------------
+# Fleet / Router construction
+# ----------------------------------------------------------------------------
+
+def test_compile_fleet_shape(setup):
+    g, params, fleet = setup
+    assert fleet.site_names == ("north", "south", "west")
+    assert fleet.cloud_plan.config.executor == "cloud"
+    assert fleet.cloud_plan.config.staleness_bound == 0
+    # per-site profiling seeds: same knobs otherwise
+    seeds = {s.plan.config.seed for s in fleet.sites}
+    assert len(seeds) == len(fleet.sites)
+    for s in fleet.sites:
+        assert s.plan.config.staleness_bound == 2
+        assert s.plan.config.exchange == "halo_async"
+    assert fleet.centroids() == [SITES[n] for n in fleet.site_names]
+
+
+def test_fleet_validation(setup):
+    g, params, fleet = setup
+    with pytest.raises(ValueError, match="at least one site"):
+        Engine((params, "gcn"), "1A+1B").compile_fleet(g, {})
+    with pytest.raises(ValueError, match="reserved"):
+        Site(name="cloud", location=(0.0, 0.0), plan=fleet.sites[0].plan)
+    with pytest.raises(KeyError, match="unknown site"):
+        fleet.site("nowhere")
+
+
+def test_router_nearest_spill_failover(setup):
+    _, _, fleet = setup
+    fs = fleet.server(capacity=2)
+    # nearest-first
+    d = fs.router.route((59.0, 18.0), fs.queue_depth)
+    assert (d.site, d.route) == ("north", "local")
+    assert d.routing_delay > 0
+    # rank is full-coverage and distance-sorted
+    ranked = fs.router.rank((59.0, 18.0))
+    assert [n for n, _ in ranked][0] == "north"
+    assert {n for n, _ in ranked} == set(fleet.site_names)
+    dists = [x for _, x in ranked]
+    assert dists == sorted(dists)
+    # capacity knob: saturate north -> spill to next-nearest
+    depth = {"north": 2, "south": 0, "west": 0}
+    d2 = fs.router.route((59.0, 18.0), lambda n: depth[n])
+    assert d2.site != "north" and d2.route == "spilled"
+    # down -> failover off the nearest site
+    fs.router.set_down("north")
+    d3 = fs.router.route((59.0, 18.0), fs.queue_depth)
+    assert d3.site != "north" and d3.route == "failed_over"
+    # everything down or full -> cloud
+    d4 = fs.router.route((59.0, 18.0), lambda n: 99)
+    assert (d4.site, d4.route) == (CLOUD, "failed_over")
+    fs.router.set_down("north", False)
+    with pytest.raises(KeyError):
+        fs.router.set_down("nowhere")
+    # origin-less requests fall back to listed site order
+    assert fs.router.rank(None)[0][0] == "north"
+
+
+def test_haversine_sanity():
+    assert haversine_km((0.0, 0.0), (0.0, 0.0)) == 0.0
+    # Stockholm -> Vienna is ~1250 km
+    d = haversine_km(SITES["north"], SITES["south"])
+    assert 1100 < d < 1400, d
+
+
+# ----------------------------------------------------------------------------
+# Serving: spillover, failover, clocks
+# ----------------------------------------------------------------------------
+
+def test_spillover_respects_capacity(setup):
+    _, _, fleet = setup
+    fs = fleet.server(capacity=3)
+    for i in range(8):
+        fs.submit(arrival_time=0.01 * i, origin=SITES["north"])
+    assert fs.queue_depth("north") == 3   # knob is a hard queue cap
+    out = fs.drain()
+    s = fs.summarize(out)
+    assert s["sites"]["north"]["served"] == 3
+    assert s["routes"]["spilled"] >= 1
+    assert s["dropped"] == 0
+    assert sum(v["served"] for v in s["sites"].values()) == 8
+
+
+def test_site_down_midtrace_zero_drops(setup):
+    _, _, fleet = setup
+    fs = fleet.server(capacity=100)
+    trace = traces.poisson(
+        20, rate=50.0, seed=2,
+        origin_fn=traces.geo_origins([SITES["north"]], spread=0.1, seed=5))
+    submitted = [fs.submit(r) for r in trace[:12]]
+    assert fs.queue_depth("north") == 12
+    rerouted = fs.set_down("north")
+    assert rerouted == 12
+    assert fs.queue_depth("north") == 0
+    submitted += [fs.submit(r) for r in trace[12:]]
+    out = fs.drain()
+    resp = [r for r in out if isinstance(r, Response)]
+    assert len(resp) == 20              # nothing dropped
+    assert all(r.site != "north" for r in resp)
+    assert all(r.route == "failed_over" for r in resp)
+    # rerouted requests keep their true arrival times
+    by_id = {r.request_id: r for r in resp}
+    for req in submitted:
+        assert by_id[req.request_id].arrival_time == pytest.approx(
+            req.arrival_time)
+    assert fs.summarize(out)["dropped"] == 0
+    # back up: traffic routes locally again
+    fs.set_down("north", False)
+    fs.submit(origin=SITES["north"])
+    [r2] = [r for r in fs.drain() if isinstance(r, Response)]
+    assert (r2.site, r2.route) == ("north", "local")
+
+
+def test_cross_site_clocks_and_latency(setup):
+    """Per-site clocks: two sites serve concurrently (neither queues
+    behind the other); one site serving both requests serializes them.
+    Latency includes the routing delay."""
+    _, _, fleet = setup
+    fs_two = fleet.server(capacity=8, max_batch=1)
+    fs_two.submit(arrival_time=0.0, origin=SITES["north"])
+    fs_two.submit(arrival_time=0.0, origin=SITES["south"])
+    out_two = [r for r in fs_two.drain() if isinstance(r, Response)]
+    assert {r.site for r in out_two} == {"north", "south"}
+    # independent clocks: no cross-site queueing
+    assert all(r.queue_delay == pytest.approx(0.0) for r in out_two)
+
+    fs_one = fleet.server(capacity=8, max_batch=1)
+    fs_one.submit(arrival_time=0.0, origin=SITES["north"])
+    fs_one.submit(arrival_time=0.0, origin=SITES["north"])
+    out_one = sorted((r for r in fs_one.drain()
+                      if isinstance(r, Response)),
+                     key=lambda r: r.finish_time)
+    # one clock: the second request queues behind the first
+    assert out_one[1].queue_delay > 0
+    for r in out_two + out_one:
+        assert r.routing_delay > 0
+        assert r.breakdown["routing"] == pytest.approx(r.routing_delay)
+        assert r.breakdown["total"] == pytest.approx(r.latency)
+        assert r.latency >= r.routing_delay
+
+
+def test_update_fanout_and_numerics(setup):
+    g, _, fleet = setup
+    fs = fleet.server()
+    delta = GraphDelta(feature_ids=np.array([3]),
+                       feature_values=np.full((1, g.feature_dim), 0.5,
+                                              np.float32))
+    reports = fs.update(delta)
+    assert set(reports) == set(fs.tier_names)
+    rep = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert not rep.errors
+    # all tiers answer identically on the mutated graph (fresh serves)
+    outs = {}
+    for name in fs.tier_names:
+        sess = fs.servers[name].session
+        outs[name] = np.asarray(sess.execute(sess.plan.graph.features))
+    ref = outs[CLOUD]
+    for name, got in outs.items():
+        np.testing.assert_allclose(got, ref, rtol=0, atol=5e-4,
+                                   err_msg=name)
+
+
+def test_per_site_slo_table(setup):
+    _, _, fleet = setup
+    tight = SLOPolicy(default_deadline=0.05)
+    loose = SLOPolicy(default_deadline=5.0)
+    fs = fleet.server(slo=per_site(default=loose, north=tight))
+    assert fs.servers["north"].slo is tight
+    assert fs.servers["south"].slo is loose
+    assert fs.servers[CLOUD].slo is loose
+    with pytest.raises(ValueError, match="not fleet sites"):
+        fleet.server(slo=per_site(nowhere=tight))
+    with pytest.raises(TypeError):
+        per_site(north="tight")
+
+
+def test_updates_not_routable(setup):
+    g, _, fleet = setup
+    fs = fleet.server()
+    delta = GraphDelta(feature_ids=np.array([0]),
+                       feature_values=np.zeros((1, g.feature_dim),
+                                               np.float32))
+    with pytest.raises(TypeError, match="update"):
+        fs.submit(delta)
+
+
+def test_fleet_summarize_shape(setup):
+    _, _, fleet = setup
+    fs = fleet.server(capacity=4)
+    trace = traces.poisson(
+        12, rate=30.0, seed=3,
+        origin_fn=traces.geo_origins(fleet.centroids(), seed=4))
+    out = fs.replay(trace)
+    s = fs.summarize(out)
+    assert set(s["sites"]) == set(fs.tier_names)
+    assert sum(s["routes"].values()) == 12
+    assert s["capacity"] == 4 and s["staleness_bound"] == 2
+    for stats in s["sites"].values():
+        assert {"served", "spilled", "failed_over", "latency_p95_s",
+                "staleness_histogram"} <= set(stats)
+        if stats["served"] == 0:
+            assert stats["latency_p95_s"] is None   # empty-site guard
+    assert sum(s["staleness_histogram"].values()) == 12
+    # empty summarize still reports every tier
+    s0 = Server.summarize([], sites=fs.tier_names)
+    assert set(s0["sites"]) == set(fs.tier_names)
+
+
+# ----------------------------------------------------------------------------
+# Stale-tolerant halo exchange
+# ----------------------------------------------------------------------------
+
+def test_bound0_bit_identity_sim(setup):
+    """staleness_bound=0 halo_async == halo, bit for bit (sim backend)."""
+    g, params, _ = setup
+    sync = Engine((params, "gcn"), "1A+2B",
+                  exchange="halo").compile(g).session()
+    async0 = Engine((params, "gcn"), "1A+2B", exchange="halo_async",
+                    staleness_bound=0).compile(g).session()
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        f = rng.standard_normal(g.features.shape).astype(np.float32)
+        a, b = sync.execute(f), async0.execute(f)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert async0.last_staleness == 0
+
+
+def test_staleness_pattern_and_accounting(setup):
+    g, params, _ = setup
+    sess = Engine((params, "gcn"), "1A+2B", exchange="halo_async",
+                  staleness_bound=2).compile(g).session()
+    rng = np.random.default_rng(1)
+    seen = []
+    for _ in range(5):
+        sess.execute(rng.standard_normal(g.features.shape
+                                         ).astype(np.float32))
+        seen.append(sess.last_staleness)
+    assert seen == [0, 1, 2, 0, 1]   # bound caps the replay run length
+    # a stale serve skips the sync term and ships zero exchange bytes
+    assert sess.account(staleness=1).total_latency < \
+        sess.account(staleness=0).total_latency
+    assert sess.exchange_bytes(staleness=1) == 0
+    assert sess.exchange_bytes(staleness=0) > 0
+    # responses carry the served staleness (fresh session: 0, 1, 2)
+    srv = Server(sess.plan.session(), max_batch=1)
+    for i in range(3):
+        srv.submit(arrival_time=0.01 * i)
+    st = [r.staleness for r in srv.drain()]
+    assert st == [0, 1, 2]
+
+
+def test_update_forces_fresh_serve(setup):
+    g, params, _ = setup
+    sess = Engine((params, "gcn"), "1A+2B", exchange="halo_async",
+                  staleness_bound=3).compile(g).session()
+    sess.execute(g.features)
+    sess.execute(g.features)
+    assert sess.last_staleness == 1
+    sess.update(GraphDelta(feature_ids=np.array([0]),
+                           feature_values=np.ones((1, g.feature_dim),
+                                                  np.float32)))
+    sess.execute(sess.plan.graph.features)
+    assert sess.last_staleness == 0   # invalidated, not replayed
+
+
+def test_engine_rejects_bound_on_sync_exchange(setup):
+    g, params, _ = setup
+    with pytest.raises(ValueError, match="stale-tolerant"):
+        Engine((params, "gcn"), "1A+2B", exchange="halo",
+               staleness_bound=1)
+    with pytest.raises(ValueError, match=">= 0"):
+        Engine((params, "gcn"), "1A+2B", exchange="halo_async",
+               staleness_bound=-1)
+
+
+def test_mesh_stale_bit_identity_and_replay_subprocess():
+    """mesh-bsp: bound=0 bit-identical to halo; bounded-stale output ==
+    a reference replaying the same recorded halo-table versions."""
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.api.engine import Engine
+        from repro.gnn import datasets, models
+        from repro.runtime import bsp
+        g = datasets.load('yelp', scale=0.06, seed=3)
+        params = models.gnn_init(jax.random.PRNGKey(0), 'gcn',
+                                 [g.feature_dim, 32, 8])
+        model = (params, 'gcn')
+        kw = dict(executor='mesh-bsp', aggregation='segment_sum')
+        s_sync = Engine(model, '1A+3B', exchange='halo', **kw
+                        ).compile(g).session()
+        s_b2 = Engine(model, '1A+3B', exchange='halo_async',
+                      staleness_bound=2, **kw).compile(g).session()
+        s_b0 = Engine(model, '1A+3B', exchange='halo_async',
+                      staleness_bound=0, **kw).compile(g).session()
+        rng = np.random.default_rng(0)
+        feats = [rng.standard_normal(g.features.shape).astype(np.float32)
+                 for _ in range(3)]
+        # bound=0: bit-identical to the synchronous exchange
+        assert np.array_equal(s_b0.execute(feats[0]),
+                              s_sync.execute(feats[0]))
+        # bound=2: serve 0 fresh, serve 1 stale
+        out0 = s_b2.execute(feats[0]); assert s_b2.last_staleness == 0
+        out1 = s_b2.execute(feats[1]); assert s_b2.last_staleness == 1
+        assert np.array_equal(out0, s_sync.execute(feats[0]))
+        # reference: rebuild serve-0's halo tables from its recorded
+        # layer inputs and replay them against serve-1's features
+        plan = s_sync.plan
+        layers0 = s_sync.resolve_executor().run_layers(
+            plan, feats[0], plan.placement.assignment,
+            s_sync.partitioned(), 'halo', aggregation='segment_sum')
+        inputs0 = [feats[0]] + [np.asarray(x) for x in layers0[:-1]]
+        tables0 = bsp.build_halo_tables(s_sync.partitioned(), inputs0)
+        ref1 = bsp.bsp_infer_stale(list(plan.model.params), 'gcn',
+                                   feats[1], s_b2.partitioned(), tables0,
+                                   aggregation='segment_sum')
+        assert np.array_equal(out1, np.asarray(ref1)), 'stale replay'
+        # and the stale serve genuinely differs from a fresh one
+        assert not np.array_equal(out1, s_sync.execute(feats[1]))
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+# ----------------------------------------------------------------------------
+# Traces: geo origins never perturb existing draws
+# ----------------------------------------------------------------------------
+
+def test_geo_origins_byte_identical_trace():
+    def feats_fn(i, rng):
+        return rng.standard_normal((4,)).astype(np.float32)
+
+    def slo_fn(i, rng):
+        return (float(rng.uniform(0.1, 1.0)), int(rng.integers(0, 3)))
+
+    kw = dict(seed=11, features_fn=feats_fn, slo_fn=slo_fn)
+    plain = traces.poisson(32, rate=10.0, **kw)
+    geo = traces.poisson(32, rate=10.0, origin_fn=traces.geo_origins(
+        list(SITES.values()), seed=9), **kw)
+    assert all(r.origin is None for r in plain)
+    assert all(r.origin is not None for r in geo)
+    for a, b in zip(plain, geo):
+        assert a.arrival_time == b.arrival_time
+        assert np.array_equal(a.features, b.features)
+        assert (a.deadline, a.priority) == (b.deadline, b.priority)
+    # bursty/constant/mixed accept the knob too
+    assert traces.constant(3, 5.0, origin_fn=lambda i: (0.0, 0.0)
+                           )[0].origin == (0.0, 0.0)
+    assert traces.bursty(3, 5.0, origin_fn=lambda i: (1.0, 2.0)
+                         )[2].origin == (1.0, 2.0)
+
+
+def test_geo_origins_zipf_skew():
+    cents = [(0.0, 0.0), (50.0, 50.0)]
+    fn = traces.geo_origins(cents, spread=0.01, zipf_s=2.0, seed=0)
+    firsts = sum(1 for i in range(200)
+                 if abs(fn(i)[0]) < 1.0)   # near centroid 0
+    assert firsts > 140   # rank-1 site dominates under skew
+    uni = traces.geo_origins(cents, spread=0.01, zipf_s=0.0, seed=0)
+    firsts_uni = sum(1 for i in range(200) if abs(uni(i)[0]) < 1.0)
+    assert 60 < firsts_uni < 140   # uniform when s=0
+    with pytest.raises(ValueError):
+        traces.geo_origins([])
+    with pytest.raises(ValueError):
+        traces.geo_origins(cents, spread=-1.0)
+
+
+# ----------------------------------------------------------------------------
+# Analysis checks: silent on healthy, fire on mutation
+# ----------------------------------------------------------------------------
+
+FLEET_CHECKS = {"fleet.router.coverage", "fleet.revision.agreement",
+                "fleet.staleness.consistency"}
+
+
+def test_fleet_checks_silent_on_healthy(setup):
+    _, _, fleet = setup
+    fs = fleet.server()
+    rep = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert set(rep.ran) == FLEET_CHECKS
+    assert not rep.errors and not rep.warnings
+    # bare Fleet is accepted too
+    rep2 = run_checks(AnalysisContext(fleet=fleet), families=["fleet"])
+    assert not rep2.errors
+    # and skipped (not failed) without a fleet in the context
+    rep3 = run_checks(AnalysisContext(plan=fleet.sites[0].plan),
+                      families=["fleet"])
+    assert FLEET_CHECKS <= set(rep3.skipped)
+
+
+def test_fleet_check_router_coverage_fires(setup):
+    _, _, fleet = setup
+    fs = fleet.server()
+    removed = fs.router.table.pop("south")
+    rep = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert any(d.check_id == "fleet.router.coverage" for d in rep.errors)
+    fs.router.table["south"] = (0.0, 0.0)   # wrong centroid also fires
+    rep2 = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert any(d.check_id == "fleet.router.coverage" for d in rep2.errors)
+    fs.router.table["south"] = removed
+    rep3 = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert not rep3.errors
+
+
+def test_fleet_check_revision_agreement_fires(setup):
+    g, _, fleet = setup
+    fs = fleet.server()
+    delta = GraphDelta(feature_ids=np.array([1]),
+                       feature_values=np.zeros((1, g.feature_dim),
+                                               np.float32))
+    fs.servers["west"].session.update(delta)   # one tier diverges
+    rep = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    errs = [d for d in rep.errors
+            if d.check_id == "fleet.revision.agreement"]
+    assert errs and "west" in errs[0].message
+    fs.update(delta)   # proper fan-out heals the divergence
+    rep2 = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert not [d for d in rep2.errors
+                if d.check_id == "fleet.revision.agreement"]
+
+
+def test_fleet_check_staleness_consistency_fires(setup):
+    _, _, fleet = setup
+    fs = fleet.server()
+    fs.staleness_bound = 9   # facade no longer matches the sessions
+    rep = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert any(d.check_id == "fleet.staleness.consistency"
+               for d in rep.errors)
+    fs.staleness_bound = 2
+    # a halo store on the cloud tier is a contract violation
+    from repro.api.session import _HaloStore
+    fs.servers[CLOUD].session._halo = _HaloStore(1)
+    rep2 = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    errs = [d for d in rep2.errors
+            if d.check_id == "fleet.staleness.consistency"]
+    assert errs and "cloud" in errs[0].message
+    fs.servers[CLOUD].session._halo = None
+    rep3 = run_checks(AnalysisContext(fleet=fs), families=["fleet"])
+    assert not rep3.errors
