@@ -1,0 +1,243 @@
+"""Node-level fault-tolerance benchmark: availability vs chaos intensity.
+
+Replays one Poisson arrival trace against the same compiled plan under a
+sweep of seeded chaos schedules (``repro.api.faults``) of increasing
+crash rate, plus transient halo-exchange losses and stragglers, and
+measures what the recovery tiers cost:
+
+  availability   answered / admitted — stays 1.0 by construction (a
+                 crash fails the shard over and replays in-flight work;
+                 nothing is dropped)
+  p95 latency    grows with crash rate: each failover charges the shard
+                 re-upload + rebuild time to the batch that absorbs it,
+                 and the surviving cluster serves at degraded capacity
+  retried /      how many responses paid a tier-1 backoff retry or were
+  recovered      served through any recovery tier at all
+
+A fault-free run with an *empty* schedule installed is compared against
+a run with no injector at all — the chaos machinery must be free when
+nothing fails.
+
+Writes the whole trajectory to ``BENCH_faults.json``.
+
+Acceptance guard (also run by scripts/ci.sh via --smoke): zero drops at
+every crash rate (every submitted request is answered), the fault-free
+p95 with an installed-but-empty schedule is within 5% of the no-injector
+baseline, availability >= 0.99 at the default crash rate, and a
+failover plan is bit-identical to a fresh ``Engine.compile`` on the
+surviving cluster.
+
+    PYTHONPATH=src python benchmarks/faults.py            # full sweep
+    PYTHONPATH=src python benchmarks/faults.py --smoke    # CI guard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(REPO, "src", "repro")):
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def build_plan(args):
+    import jax
+
+    from repro.api import Engine
+    from repro.gnn import datasets, models
+
+    graph = datasets.load(args.dataset, scale=args.scale, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), args.kind,
+                             [graph.feature_dim, args.hidden, 8])
+    engine = Engine((params, args.kind), cluster=args.cluster,
+                    network=args.network, executor=args.executor,
+                    exchange="halo_async",
+                    staleness_bound=args.staleness_bound)
+    return engine, engine.compile(graph), graph
+
+
+def run_trace(plan, trace, args, schedule) -> dict:
+    from repro.api import Server
+
+    server = plan.server(max_batch=args.max_batch, faults=schedule)
+    t0 = time.perf_counter()
+    out = server.replay(list(trace))
+    wall = time.perf_counter() - t0
+    summary = Server.summarize(out)
+    summary["wall_s"] = wall
+    summary["answered"] = summary["requests"]
+    summary["replayed"] = server.replayed
+    summary["crashed_now"] = sorted(server._crashed)
+    return summary
+
+
+def check_failover_parity(engine, plan) -> str:
+    """One crash, two derivations: ``fail_nodes(mode="recompile")`` must
+    equal a fresh ``Engine.compile`` on the surviving cluster — same
+    layout, bit-identical embeddings. Returns "" or a failure message."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.api import Engine
+
+    crashed = plan.cluster.nodes[-1].name
+    failover = engine.fail_nodes(plan, [crashed], mode="recompile")
+    survivors = dataclasses.replace(
+        plan.cluster, nodes=[n for n in plan.cluster.nodes
+                             if n.name != crashed])
+    cfg = plan.config
+    fresh = Engine(plan.model, survivors, partitioner=cfg.partitioner,
+                   placement=cfg.placement, compressor=cfg.compressor,
+                   exchange=cfg.exchange, executor=cfg.executor,
+                   network=cfg.network, seed=cfg.seed,
+                   sync_cost=cfg.sync_cost, aggregation=cfg.aggregation,
+                   staleness_bound=cfg.staleness_bound
+                   ).compile(plan.graph)
+    if not np.array_equal(failover.placement.assignment,
+                          fresh.placement.assignment):
+        return "failover assignment differs from fresh survivor compile"
+    a = failover.session().query().embeddings
+    b = fresh.session().query().embeddings
+    if not np.array_equal(a, b):
+        return ("failover embeddings differ from fresh survivor compile "
+                f"(max |d| {float(np.abs(a - b).max()):.3e})")
+    return ""
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + pass/fail guard (for scripts/ci.sh)")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_faults.json"))
+    ap.add_argument("--dataset", default="siot")
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--kind", default="gcn")
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--cluster", default="1A+3B")
+    ap.add_argument("--network", default="wifi")
+    ap.add_argument("--executor", default="sim")
+    ap.add_argument("--staleness-bound", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--crash-rates", type=float, nargs="+",
+                    default=[0.0, 0.2, 0.5, 1.0],
+                    help="crash events per simulated second (each paired "
+                         "with a recover)")
+    ap.add_argument("--default-crash-rate", type=float, default=0.5,
+                    help="the rate the availability guard is asserted at")
+    ap.add_argument("--loss-rate", type=float, default=1.0,
+                    help="transient halo-loss events per simulated second")
+    ap.add_argument("--straggler-rate", type=float, default=0.5)
+    ap.add_argument("--load", type=float, default=1.0,
+                    help="arrival rate as a multiple of the sustainable "
+                         "single-request rate")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.scale = 0.05
+        args.requests = 48
+        args.crash_rates = [0.0, 0.5]
+        args.default_crash_rate = 0.5
+        if args.out == ap.get_default("out"):   # don't dirty the worktree
+            import tempfile
+            args.out = os.path.join(tempfile.gettempdir(),
+                                    "BENCH_faults.smoke.json")
+    if args.default_crash_rate not in args.crash_rates:
+        args.crash_rates = sorted(set(args.crash_rates)
+                                  | {args.default_crash_rate})
+
+    from repro.api import traces
+    from repro.api.faults import FaultSchedule
+
+    engine, plan, graph = build_plan(args)
+    nodes = [n.name for n in plan.cluster.nodes]
+    rate = args.load / plan.session().account().total_latency
+    horizon = args.requests / rate
+    trace = traces.poisson(args.requests, rate, seed=args.seed)
+
+    sweep = []
+    print("schedule,crash_rate,events,p95_s,availability,answered,"
+          "retried,recovered,replayed")
+
+    # No injector at all: the reference the empty-schedule run must match.
+    base = run_trace(plan, trace, args, None)
+    base.update(schedule="none", crash_rate=0.0, events=0)
+    sweep.append(base)
+    print(f"none,0.0,0,{base['latency_p95_s']:.4f},"
+          f"{base['availability']:.3f},{base['answered']},0,0,0")
+
+    for crash_rate in sorted(set(args.crash_rates)):
+        sched = FaultSchedule.random(
+            nodes, horizon=horizon, crash_rate=crash_rate,
+            loss_rate=args.loss_rate if crash_rate else 0.0,
+            straggler_rate=args.straggler_rate if crash_rate else 0.0,
+            seed=args.seed)
+        row = run_trace(plan, trace, args, sched)
+        row.update(schedule="chaos" if len(sched) else "empty",
+                   crash_rate=crash_rate, events=len(sched),
+                   event_counts=sched.counts())
+        sweep.append(row)
+        print(f"{row['schedule']},{crash_rate},{row['events']},"
+              f"{row['latency_p95_s']:.4f},{row['availability']:.3f},"
+              f"{row['answered']},{row['retried']},{row['recovered']},"
+              f"{row['replayed']}")
+
+    payload = {
+        "benchmark": "fault_tolerance",
+        "config": {k: v for k, v in vars(args).items() if k != "smoke"},
+        "graph": {"vertices": graph.num_vertices, "edges": graph.num_edges},
+        "nodes": nodes,
+        "rate_rps": rate,
+        "horizon_s": horizon,
+        "rows": sweep,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} ({len(sweep)} rows)")
+
+    # Acceptance guard: (1) zero drops at every crash rate; (2) the empty
+    # schedule costs nothing (p95 within 5% of no-injector); (3)
+    # availability >= 0.99 at the default crash rate; (4) failover plans
+    # are bit-identical to fresh survivor compiles.
+    failures = []
+    for row in sweep:
+        if row["answered"] != args.requests:
+            failures.append(
+                f"crash_rate={row['crash_rate']} ({row['schedule']}): "
+                f"answered {row['answered']}/{args.requests} — dropped "
+                "requests")
+    empty = next(r for r in sweep
+                 if r["schedule"] == "empty" and r["crash_rate"] == 0.0)
+    if empty["latency_p95_s"] > base["latency_p95_s"] * 1.05 + 1e-12:
+        failures.append(
+            f"fault-free overhead: empty-schedule p95 "
+            f"{empty['latency_p95_s']:.4f}s vs no-injector "
+            f"{base['latency_p95_s']:.4f}s (> 5%)")
+    at_default = next(r for r in sweep
+                      if r["crash_rate"] == args.default_crash_rate
+                      and r["schedule"] != "none")
+    if at_default["availability"] < 0.99:
+        failures.append(
+            f"availability {at_default['availability']:.3f} < 0.99 at "
+            f"crash_rate={args.default_crash_rate}")
+    parity = check_failover_parity(engine, plan)
+    if parity:
+        failures.append(parity)
+    if failures:
+        print("FAULTS GUARD FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("faults guard OK: zero drops at every crash rate; fault-free "
+          "overhead <= 5%; availability >= 0.99; failover == fresh "
+          "survivor compile")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,3 +36,7 @@ PYTHONPATH=src python benchmarks/slo.py --smoke
 # Geo-distributed fleet: at >= 2 sites the fleet must beat the all-cloud
 # baseline on p95, and one injected site failure must drop zero requests.
 PYTHONPATH=src python benchmarks/fleet.py --smoke
+# Node-level fault tolerance: seeded chaos must drop zero requests at every
+# crash rate, an installed-but-empty schedule must cost <= 5% on p95, and a
+# failover plan must equal a fresh compile on the surviving cluster.
+PYTHONPATH=src python benchmarks/faults.py --smoke

@@ -11,6 +11,9 @@ the invariant catalogue):
             a session's pending incremental state
   fleet     geo-fleet router coverage, cross-tier graph-revision agreement,
             staleness_bound consistency of the stale-tolerant exchange
+  fault     node-failure recovery: failover-plan eviction/coverage (and
+            the cluster_spec=None pricing invariant), stale-halo layout
+            agreement, retry-budget reachability + schedule well-formedness
   kernel    jax.eval_shape lint of block_spmm / dequant_spmm launches:
             grid divisibility, prefetch-table bounds, wire dtype, VMEM/SMEM
   cache     program/BlockCsr cache-key completeness + closure-pin detection
@@ -34,6 +37,7 @@ from repro.analysis.diagnostics import (AnalysisContext, CHECKS, Diagnostic,
 
 # Importing the check modules registers every check in CHECKS.
 from repro.analysis import cache_audit    # noqa: E402,F401
+from repro.analysis import fault_checks   # noqa: E402,F401
 from repro.analysis import fleet_checks   # noqa: E402,F401
 from repro.analysis import frontier_checks  # noqa: E402,F401
 from repro.analysis import hlo            # noqa: E402,F401
@@ -43,7 +47,7 @@ from repro.analysis import plan_checks    # noqa: E402,F401
 __all__ = [
     "AnalysisContext", "CHECKS", "Diagnostic", "PlanInvariantWarning",
     "PlanValidationError", "Report", "SEVERITIES", "VALIDATE_MODES",
-    "cache_audit", "checks_for", "fleet_checks", "frontier_checks", "hlo",
-    "kernel_lint",
+    "cache_audit", "checks_for", "fault_checks", "fleet_checks",
+    "frontier_checks", "hlo", "kernel_lint",
     "plan_checks", "register_check", "run_checks", "verify_plan",
 ]

@@ -102,6 +102,33 @@ def _demo_frontier():
     return sess
 
 
+def _demo_failover():
+    """One post-failover plan + live fault-aware server for the fault
+    family: compile on the full cluster, crash one node mid-trace via a
+    chaos schedule, audit the degraded state the server is left in."""
+    import jax
+
+    from repro.api.engine import Engine
+    from repro.api.faults import FailoverAudit, Fault, FaultSchedule
+    from repro.api.server import Request
+    from repro.gnn import datasets, models
+
+    g = datasets.load("siot", scale=DEMO_SCALE, seed=3)
+    params = models.gnn_init(jax.random.PRNGKey(3), "gcn",
+                             [g.feature_dim, 16, 8])
+    engine = Engine((params, "gcn"), "1A+3B", executor="sim",
+                    exchange="halo_async", staleness_bound=2)
+    plan = engine.compile(g)
+    crashed = plan.cluster.nodes[-1].name
+    sched = FaultSchedule([Fault(time=0.05, kind="crash", node=crashed)])
+    server = plan.server(max_batch=4, faults=sched)
+    for i in range(8):
+        server.submit(Request(arrival_time=0.02 * i))
+    server.drain()
+    return FailoverAudit(plan=server.session.plan, base_plan=plan,
+                         crashed=(crashed,), server=server, schedule=sched)
+
+
 def _demo_hlo() -> str:
     """Lowered HLO text of a small jitted layer stack."""
     import jax
@@ -141,8 +168,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="exit nonzero on warnings too")
     p.add_argument("--families",
                    help="comma-separated analyzer families to run "
-                        "(plan,frontier,kernel,cache,hlo; default all "
-                        "applicable)")
+                        "(plan,frontier,fleet,fault,kernel,cache,hlo; "
+                        "default all applicable)")
     p.add_argument("--list", action="store_true", dest="list_checks",
                    help="print the check catalogue and exit")
     p.add_argument("-v", "--verbose", action="store_true",
@@ -193,6 +220,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                 AnalysisContext(plan=sess.plan,
                                 frontier=sess.frontier_state()),
                 families or ("plan", "frontier", "kernel", "cache"))
+        if families is None or "fault" in families:
+            audit = _demo_failover()
+            run("fault[post-failover]",
+                AnalysisContext(plan=audit.plan, failover=audit),
+                families or ("plan", "fault", "kernel", "cache"))
         if families is None or "hlo" in families:
             run("hlo[scan-stack]", AnalysisContext(hlo=_demo_hlo()),
                 ("hlo",))

@@ -94,6 +94,11 @@ class AnalysisContext:
     #: only — the revision check still runs, the router/serving checks
     #: report what a bare fleet cannot violate).
     fleet: Optional[object] = None
+    #: node-failure recovery state for the fault family: a
+    #: :class:`repro.api.faults.FailoverAudit` bundling a post-failover
+    #: plan with the full-cluster plan it degraded from, the crashed node
+    #: names, and optionally the live Server / the replayed FaultSchedule.
+    failover: Optional[object] = None
     #: representative micro-batch size for lint of the batched kernels.
     batch_probe: int = 8
 

@@ -29,10 +29,15 @@ _LAZY = {
     "FleetServer": "repro.api.fleet",
     "Router": "repro.api.fleet",
     "Site": "repro.api.fleet",
+    "Fault": "repro.api.faults",
+    "FaultSchedule": "repro.api.faults",
+    "FaultInjector": "repro.api.faults",
+    "FailoverAudit": "repro.api.faults",
     "SLOPolicy": "repro.api.slo",
     "DegradationLevel": "repro.api.slo",
     "AdaptiveBatchController": "repro.api.slo",
     "Rejection": "repro.api.slo",
+    "faults": "repro.api.faults",   # submodule: resolves to the module
     "fleet": "repro.api.fleet",     # submodule: resolves to the module
     "traces": "repro.api.traces",   # submodule: resolves to the module
     "updates": "repro.api.updates",  # submodule: resolves to the module

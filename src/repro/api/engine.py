@@ -253,6 +253,113 @@ class Engine:
                    update_max_cut_growth=cfg.update_max_cut_growth,
                    validate=cfg.validate)
 
+    # -- node-level fault tolerance ------------------------------------------
+
+    def fail_nodes(self, plan: Plan, crashed, *,
+                   assignment: Optional[np.ndarray] = None,
+                   mode: Optional[str] = None) -> Plan:
+        """Shard failover: evict crashed nodes, re-place their shards.
+
+        ``crashed`` is one node name / index or a sequence of them
+        (``SimNode.name`` entries of ``plan.cluster.nodes``). The default
+        repair path keeps the survivors' profiled fog metadata and runs
+        PR 4's machinery — ``evacuate_assignment`` marks the crashed
+        shards' vertices unassigned, ``repair_assignment`` greedily
+        re-places them onto the survivors (min-cut-aware,
+        capacity-bounded), ``refresh_placement`` re-prices — falling back
+        to a full compile on the surviving cluster when the repaired
+        partitioning degrades past ``config.update_max_imbalance``.
+        ``mode`` forces "repair" or "recompile" ("recompile" is
+        *bit-identical to a fresh* ``Engine.compile`` *on the surviving
+        cluster* by construction — it runs exactly that setup phase).
+
+        The returned Plan has ``provenance="failover"``, a
+        degraded-capacity ``cluster`` holding only the survivors, and —
+        deliberately — ``config.cluster_spec=None``: a failover plan
+        carrying the original spec string would resurrect the crashed
+        node on the next ``from_plan`` recompile and price update
+        repairs against capacity that no longer exists.
+        """
+        if mode not in (None, "repair", "recompile"):
+            raise ValueError(f"mode must be None, 'repair' or 'recompile', "
+                             f"got {mode!r}")
+        nodes = plan.cluster.nodes
+        names = [n.name for n in nodes]
+        if isinstance(crashed, (str, int, np.integer)):
+            crashed = [crashed]
+        evicted = set()
+        for c in crashed:
+            if isinstance(c, (int, np.integer)):
+                j = int(c)
+                if not 0 <= j < len(nodes):
+                    raise ValueError(f"node index {j} out of range for "
+                                     f"{len(nodes)} nodes")
+            else:
+                if c not in names:
+                    raise KeyError(f"unknown node {c!r}; cluster has: "
+                                   f"{', '.join(names)}")
+                j = names.index(c)
+            evicted.add(j)
+        if not evicted:
+            raise ValueError("fail_nodes needs at least one crashed node")
+        keep = [j for j in range(len(nodes)) if j not in evicted]
+        if not keep:
+            raise ValueError(
+                f"cannot fail every node ({sorted(names[j] for j in evicted)}"
+                f" is the whole cluster); at least one must survive")
+        cfg = plan.config
+        survivors = dataclasses.replace(
+            plan.cluster, nodes=[nodes[j] for j in keep])
+        if mode != "recompile":
+            base = (plan.placement.assignment if assignment is None
+                    else np.asarray(assignment, np.int64))
+            evacuated = incremental.evacuate_assignment(base, keep,
+                                                        len(nodes))
+            repaired = incremental.repair_assignment(plan.graph, evacuated,
+                                                     len(keep))
+            imb_before = incremental.imbalance_of(base, len(nodes))
+            imb = incremental.imbalance_of(repaired, len(keep))
+            if (mode == "repair"
+                    or imb <= cfg.update_max_imbalance
+                    * max(1.0, imb_before)):
+                fogs = tuple(plan.fogs[j] for j in keep)
+                placement = incremental.refresh_placement(
+                    plan.graph, repaired, np.arange(len(keep)), fogs,
+                    bytes_per_vertex=cfg.bytes_per_vertex,
+                    k_layers=self.model.num_layers,
+                    sync_cost=plan.cluster.sync_cost)
+                needs_shards = getattr(self._executor, "needs_block_shards",
+                                       False)
+                agg = bsp.resolve_aggregation(
+                    cfg.aggregation, self.model.kind,
+                    exchange=cfg.exchange if needs_shards else None)
+                build_blocks = ((needs_shards and agg == "pallas")
+                                or plan.partitioned.local_csr is not None)
+                partitioned = bsp.build_partitioned(
+                    plan.graph, repaired, build_blocks=build_blocks,
+                    n=len(keep))
+                return self._validated(Plan(
+                    model=self.model, graph=plan.graph, cluster=survivors,
+                    fogs=fogs, placement=placement, partitioned=partitioned,
+                    config=cfg.with_overrides(cluster_spec=None),
+                    provenance="failover"))
+        # Recompile: the full setup phase on the surviving cluster (fresh
+        # per-node profiling seeds at the survivors' new indices) — the
+        # result IS a fresh Engine.compile of that cluster, re-tagged.
+        eng = Engine(self.model, survivors, network=cfg.network,
+                     partitioner=cfg.partitioner, placement=cfg.placement,
+                     compressor=cfg.compressor, exchange=cfg.exchange,
+                     executor=cfg.executor, hidden=cfg.hidden,
+                     seed=cfg.seed, sync_cost=cfg.sync_cost,
+                     bytes_per_vertex=cfg.bytes_per_vertex,
+                     aggregation=cfg.aggregation,
+                     staleness_bound=cfg.staleness_bound,
+                     update_max_imbalance=cfg.update_max_imbalance,
+                     update_max_cut_growth=cfg.update_max_cut_growth,
+                     validate=cfg.validate)
+        return dataclasses.replace(eng.compile(plan.graph),
+                                   provenance="failover")
+
     # -- dynamic-graph updates ----------------------------------------------
 
     def _recompile(self, graph: Graph) -> Plan:

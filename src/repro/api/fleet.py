@@ -147,9 +147,10 @@ class Fleet:
 class RouteDecision:
     """Where one request goes and why.
 
-    ``route`` ∈ {"local", "spilled", "failed_over"}: nearest site /
-    load spillover to another site / rerouted off a down tier (or to the
-    cloud because everything is down or saturated).
+    ``route`` ∈ {"local", "spilled", "failed_over", "recovered"}:
+    nearest site / load spillover to another site / rerouted off a down
+    tier (or to the cloud because everything is down or saturated) /
+    pulled back to its revived home site by ``set_down(name, False)``.
     """
     site: str
     route: str
@@ -258,6 +259,11 @@ class FleetServer:
         for every tier, or a per-site table from
         :func:`repro.api.slo.per_site` (``"default"`` covers unnamed
         sites, ``"cloud"`` the last-resort tier).
+      faults: optional per-site chaos table ``{site_name:
+        FaultSchedule}`` (``repro.api.faults``) — each named site's
+        Server replays its schedule on its own clock (node crashes fail
+        shards over *within* the site; whole-site outages are
+        ``set_down``). The cloud tier never takes node faults.
       max_batch / max_wait / pipelined / adaptive_batch / session kwargs:
         forwarded to each per-site ``Server``/``Session``.
 
@@ -276,9 +282,16 @@ class FleetServer:
                  = None,
                  adaptive_batch=None,
                  staleness_bound: Optional[int] = None,
+                 faults: Optional[Mapping[str, object]] = None,
                  **session_kw):
         self.fleet = fleet
         self.router = Router(fleet, capacity=capacity)
+        if faults is not None:
+            unknown = set(faults) - set(fleet.site_names)
+            if unknown:
+                raise ValueError(
+                    f"fault schedules for unknown sites {sorted(unknown)}; "
+                    f"available: {', '.join(fleet.site_names)}")
         if isinstance(slo, Mapping):
             unknown = (set(slo) - set(fleet.site_names)
                        - {CLOUD, "default"})
@@ -299,7 +312,9 @@ class FleetServer:
             if staleness_bound is not None:
                 kw["staleness_bound"] = int(staleness_bound)
             self.servers[site.name] = site.plan.server(
-                slo=self._slo_for(site.name), **srv_kw, **kw)
+                slo=self._slo_for(site.name),
+                faults=None if faults is None else faults.get(site.name),
+                **srv_kw, **kw)
         # The cloud tier serves fresh: single-program numerics, no
         # cross-fog exchange, nothing to replay.
         self.servers[CLOUD] = fleet.cloud_plan.server(
@@ -375,11 +390,42 @@ class FleetServer:
         """Mark a site down (or back up). Going down reroutes the site's
         whole pending queue through the router — queued work is forwarded
         (one extra site-to-site hop on its routing delay), never dropped.
-        Returns how many pending requests were rerouted.
+        Coming back up pulls still-pending requests that failed over off
+        this site back to it (route ``"recovered"``, one return hop);
+        fresh submits to the revived site simply route ``"local"``
+        again. Returns how many pending requests were moved either way.
         """
         self.router.set_down(name, down)
         if not down:
-            return 0
+            dst_loc = self.fleet.site(name).location
+            moved = 0
+            for other in self.tier_names:
+                if other == name:
+                    continue
+                srv = self.servers[other]
+                keep = []
+                for req in srv._pending:
+                    meta = (self._routes.get(req.request_id)
+                            if isinstance(req, Request) else None)
+                    if (meta is None or meta.route != "failed_over"
+                            or self.router.rank(meta.origin)[0][0] != name):
+                        keep.append(req)
+                        continue
+                    # Pull the refugee home: it pays one return hop from
+                    # wherever it was parked back to its revived site.
+                    hop = (CLOUD_ROUTING_S if other == CLOUD
+                           else ROUTING_BASE_S
+                           + ROUTING_PER_KM_S * haversine_km(
+                               self.fleet.site(other).location, dst_loc))
+                    home_dist = self.router.rank(meta.origin)[0][1]
+                    self._enqueue(
+                        dataclasses.replace(req,
+                                            arrival_time=meta.arrival_time),
+                        RouteDecision(name, "recovered", home_dist),
+                        meta.arrival_time, meta.routing_delay + hop)
+                    moved += 1
+                srv._pending = keep
+            return moved
         srv = self.servers[name]
         pending, srv._pending = srv._pending, []
         src_loc = self.fleet.site(name).location
@@ -409,6 +455,7 @@ class FleetServer:
             out[name] = srv.session.update(delta)
             srv.last_update_report = out[name]
             srv._svc_cache.clear()
+            srv._note_plan()   # re-track the fault-recovery restore target
         return out
 
     # -- serving -------------------------------------------------------------
@@ -474,11 +521,17 @@ class FleetServer:
         resp = [r for r in responses if isinstance(r, Response)]
         summary["routes"] = {
             kind: sum(1 for r in resp if r.route == kind)
-            for kind in ("local", "spilled", "failed_over")}
+            for kind in ("local", "spilled", "failed_over", "recovered")}
         summary["down_sites"] = list(self.router.down_sites)
         summary["capacity"] = self.router.capacity
         summary["staleness_bound"] = self.staleness_bound
-        summary["dropped"] = self.dropped + len(self._routes)
+        dropped = self.dropped + len(self._routes)
+        summary["dropped"] = dropped
+        # Fleet view of availability: dropped requests (0 by
+        # construction) count against the answered fraction too.
+        rej = summary.get("rejected", 0)
+        den = len(resp) + rej + dropped
+        summary["availability"] = len(resp) / den if den else 1.0
         return summary
 
     def __repr__(self) -> str:

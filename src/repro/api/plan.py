@@ -98,8 +98,12 @@ class Plan:
 
     ``provenance`` records how the plan was produced: "compile" (the full
     setup phase), "incremental" (``Engine.apply_delta`` repaired an
-    existing plan) or "recompile" (a delta tripped a repair threshold and
-    the full pipeline re-ran); ``update_report`` is the
+    existing plan), "recompile" (a delta tripped a repair threshold and
+    the full pipeline re-ran) or "failover" (``Engine.fail_nodes``
+    re-placed a crashed node's shards onto the surviving,
+    degraded-capacity cluster — such plans carry ``cluster_spec=None``
+    so later recompiles/pricing never resurrect the crashed node);
+    ``update_report`` is the
     :class:`~repro.api.updates.UpdateReport` of the delta that produced an
     updated plan (None for fresh compiles).
     """
@@ -170,15 +174,16 @@ class Plan:
 
     def server(self, *, max_batch: int = 8, max_wait: float = 0.0,
                pipelined: bool = True, slo=None, adaptive_batch=None,
-               **session_kw) -> "Server":
+               faults=None, **session_kw) -> "Server":
         """Open a request-level server (micro-batching + pipelined
         collect/execute) over a fresh session; ``slo``/``adaptive_batch``
-        activate the SLO control plane (``repro.api.slo``); extra kwargs
+        activate the SLO control plane (``repro.api.slo``); ``faults``
+        installs a chaos schedule (``repro.api.faults``); extra kwargs
         go to ``session()``."""
         from repro.api.server import Server
         return Server(self.session(**session_kw), max_batch=max_batch,
                       max_wait=max_wait, pipelined=pipelined, slo=slo,
-                      adaptive_batch=adaptive_batch)
+                      adaptive_batch=adaptive_batch, faults=faults)
 
     def describe(self) -> dict:
         """Plain-dict summary (for logs / dashboards)."""

@@ -94,6 +94,13 @@ def default_ladder(session) -> Tuple[DegradationLevel, ...]:
          round each disappear from the critical path.
 
     Rungs that would be no-ops for the base config are skipped.
+
+    On a failover plan (``plan.provenance == "failover"`` — the session
+    serves a degraded-capacity surviving cluster) the non-depth
+    sacrifices collapse into one leading **"survivor-degraded"** rung:
+    lost capacity means the cheapest headroom (kernel lane + wire bytes)
+    is taken in a single step before admission starts trading model
+    depth.
     """
     from repro.runtime import bsp   # lazy: keep module import light
     plan = session.plan
@@ -116,6 +123,11 @@ def default_ladder(session) -> Tuple[DegradationLevel, ...]:
         comp = "uniform8"
         rungs.append(DegradationLevel("uniform8", aggregation=agg,
                                       compressor=comp))
+    if getattr(plan, "provenance", "") == "failover" and rungs:
+        # Survivor-degraded: on a degraded-capacity failover plan the
+        # non-depth sacrifices are one rung, walked first.
+        rungs = [DegradationLevel("survivor-degraded", aggregation=agg,
+                                  compressor=comp)]
     for layers in range(plan.model.num_layers - 1, 0, -1):
         rungs.append(DegradationLevel(f"layers{layers}", aggregation=agg,
                                       compressor=comp, num_layers=layers))

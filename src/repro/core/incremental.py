@@ -168,6 +168,35 @@ def imbalance_of(assignment: np.ndarray, n: int) -> float:
     return float(sizes.max() / max(1.0, len(assignment) / n))
 
 
+def evacuate_assignment(assignment: np.ndarray, keep: Sequence[int],
+                        n_old: int) -> np.ndarray:
+    """Renumber an assignment onto the surviving partitions.
+
+    ``keep`` lists the surviving old partition indices in their new
+    order; every vertex on a surviving partition maps to that
+    partition's new index (``0 .. len(keep)-1``), every vertex on an
+    evicted partition becomes ``-1`` — exactly the shape
+    :func:`repair_assignment` re-places. This is the shard-failover
+    front half: evacuate, then repair onto the survivors.
+    """
+    keep = np.asarray(list(keep), np.int64)
+    if keep.size == 0:
+        raise ValueError("evacuate_assignment needs >= 1 survivor")
+    if keep.size != np.unique(keep).size:
+        raise ValueError(f"duplicate survivor indices in {keep.tolist()}")
+    if keep.min() < 0 or keep.max() >= n_old:
+        raise ValueError(f"survivor indices {keep.tolist()} out of range "
+                         f"for {n_old} partitions")
+    newidx = -np.ones(n_old, np.int64)
+    newidx[keep] = np.arange(keep.size)
+    assignment = np.asarray(assignment, np.int64)
+    if assignment.size and (assignment.min() < 0
+                            or assignment.max() >= n_old):
+        raise ValueError("assignment references partitions outside "
+                         f"[0, {n_old})")
+    return newidx[assignment]
+
+
 # ----------------------------------------------------------------------------
 # Dirty-shard tracking
 # ----------------------------------------------------------------------------

@@ -461,6 +461,12 @@ def simulate_update(cluster: FogCluster, delta) -> float:
     (repartition + halo table swap must quiesce the superstep). Updates
     serialize with execution in the ``Server``'s pipeline, so this is the
     time the execution stage is blocked.
+
+    ``cluster`` must be the cluster the repair actually runs on: after a
+    node failover the caller threads the SURVIVING ``FogCluster``
+    (``plan.cluster`` of the failover plan) through, so the
+    mean-capability term reflects degraded capacity rather than the
+    original fleet.
     """
     g = cluster.graph
     touched_v = (delta.num_added_vertices + delta.num_removed_vertices
@@ -475,6 +481,77 @@ def simulate_update(cluster: FogCluster, delta) -> float:
                + UPDATE_EDGE_FLOPS * touched_e) / mean_cap
     sync = cluster.sync_cost if delta.is_structural else 0.0
     return UPDATE_BASE_S + collect + rebuild + sync
+
+
+# ----------------------------------------------------------------------------
+# Fault-recovery pricing (the node-level fault-tolerance tiers)
+# ----------------------------------------------------------------------------
+
+# Tier 1 — transient halo-exchange loss: every failed sync round costs the
+# wasted round itself (one delta) plus an exponentially growing backoff
+# before the retry, truncated by the attempt budget and the hard timeout.
+RETRY_BACKOFF_BASE_S = 0.02
+RETRY_BACKOFF_MULT = 2.0
+RETRY_MAX_ATTEMPTS = 4
+RETRY_TIMEOUT_S = 1.0
+
+# Tier 3 — shard failover: fixed control overhead of the replan (evict +
+# greedy re-place + placement re-pricing) plus re-uploading each moved
+# vertex's feature row to its new fog over the LAN, plus the rebuild on the
+# SURVIVING cluster's mean capability (degraded-capacity pricing), plus one
+# quiescing sync round while the layout swaps.
+FAILOVER_BASE_S = 0.05
+
+
+def simulate_retry(losses: int, *, sync_cost: float = DEFAULT_SYNC_COST,
+                   base: float = RETRY_BACKOFF_BASE_S,
+                   mult: float = RETRY_BACKOFF_MULT,
+                   max_attempts: int = RETRY_MAX_ATTEMPTS,
+                   timeout: float = RETRY_TIMEOUT_S
+                   ) -> Tuple[float, int, bool]:
+    """Price recovering ``losses`` consecutive transient exchange losses.
+
+    Attempt ``k`` (0-based) fails, costing the wasted sync round plus a
+    ``base * mult**k`` backoff; after ``losses`` failed attempts the next
+    retry succeeds (its cost is the normal sync already in the serving
+    account). Returns ``(recovery_seconds, attempts_made, succeeded)`` —
+    ``succeeded`` is False when the attempt budget or the timeout would be
+    exceeded first (the caller escalates to the next recovery tier, paying
+    the time spent so far). Fully deterministic.
+    """
+    losses = int(losses)
+    if losses < 0:
+        raise ValueError(f"losses must be >= 0, got {losses}")
+    t = 0.0
+    for k in range(losses):
+        if k >= max_attempts:
+            return t, k, False
+        step = sync_cost + base * mult ** k
+        if t + step > timeout + 1e-12:
+            return t, k, False
+        t += step
+    return t, losses, True
+
+
+def simulate_failover(cluster: FogCluster, moved_vertices: int,
+                      feature_dim: Optional[int] = None) -> float:
+    """Price one shard failover on the simulated serving clock.
+
+    ``cluster`` is the SURVIVING cluster (the failover plan's — degraded
+    capacity prices the rebuild, same threading rule as
+    :func:`simulate_update`); ``moved_vertices`` how many vertices the
+    crashed node held (each re-uploads one feature row and re-packs its
+    shard entries). Occupies the Server pipeline's execution stage, like
+    an update repair.
+    """
+    if feature_dim is None:
+        feature_dim = cluster.feature_dim
+    wire = moved_vertices * (feature_dim * 8.0 + PROTOCOL_BYTES_PER_VERTEX)
+    collect = wire / NETWORKS[cluster.network]["lan"]
+    mean_cap = float(np.mean([n.effective_capability
+                              for n in cluster.nodes]))
+    rebuild = UPDATE_VERTEX_FLOPS * moved_vertices * feature_dim / mean_cap
+    return FAILOVER_BASE_S + collect + rebuild + cluster.sync_cost
 
 
 def apply_load_trace(cluster: FogCluster, loads: Sequence[float]) -> None:

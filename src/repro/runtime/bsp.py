@@ -1442,9 +1442,22 @@ class ExchangeSpec:
     ``stale_tolerant`` marks modes whose serves may replay recorded halo
     tables up to a staleness bound instead of running the collective
     (``EngineConfig.staleness_bound`` only applies to those entries).
+
+    ``retryable`` + the retry knobs are the tier-1 fault-recovery hook:
+    a transient loss of this exchange is retried with exponential
+    backoff (``backoff_base_s * backoff_mult**k`` after failed attempt
+    ``k``), bounded by ``max_retries`` attempts and a ``retry_timeout_s``
+    hard deadline; :meth:`recovery_cost` prices the walk on the
+    simulated clock. Exhausting the budget escalates to the next tier
+    (stale ride-through, then shard failover).
     """
     name: str
     stale_tolerant: bool = False
+    retryable: bool = False
+    max_retries: int = 4
+    backoff_base_s: float = 0.02
+    backoff_mult: float = 2.0
+    retry_timeout_s: float = 1.0
 
     def bytes_per_sync(self, pg: PartitionedGraph, feature_dim: int,
                        dtype_bytes: int = 4,
@@ -1454,8 +1467,23 @@ class ExchangeSpec:
         return exchange_bytes(pg, feature_dim, _wire_exchange(self.name),
                               dtype_bytes, row_overhead_bytes)
 
+    def recovery_cost(self, losses: int, sync_cost: float
+                      ) -> "Tuple[float, int, bool]":
+        """Price recovering ``losses`` consecutive transient losses of
+        this exchange: ``(seconds, attempts, succeeded)``. A
+        non-retryable exchange fails immediately at zero cost (the
+        caller escalates straight past tier 1)."""
+        if not self.retryable:
+            return 0.0, 0, False
+        from repro.core import simulation   # lazy: keep module load light
+        return simulation.simulate_retry(
+            losses, sync_cost=sync_cost, base=self.backoff_base_s,
+            mult=self.backoff_mult, max_attempts=self.max_retries,
+            timeout=self.retry_timeout_s)
 
-EXCHANGES.register("halo", ExchangeSpec("halo"))
-EXCHANGES.register("allgather", ExchangeSpec("allgather"))
+
+EXCHANGES.register("halo", ExchangeSpec("halo", retryable=True))
+EXCHANGES.register("allgather", ExchangeSpec("allgather", retryable=True))
 EXCHANGES.register("halo_async", ExchangeSpec("halo_async",
-                                              stale_tolerant=True))
+                                              stale_tolerant=True,
+                                              retryable=True))

@@ -1,0 +1,496 @@
+"""Node-level fault tolerance: chaos injection, retry, failover, restore.
+
+The load-bearing guarantees:
+  * ``FaultSchedule`` is deterministic — same seed, nodes and rates give
+    the identical event list, and the generator never crashes the last
+    surviving node;
+  * ``simulate_retry`` prices exponential backoff against the retry
+    budget/timeout, surfaced per exchange via
+    ``ExchangeSpec.recovery_cost``;
+  * ``Engine.fail_nodes`` evicts the crashed node everywhere, carries
+    ``cluster_spec=None`` (so later recompiles/pricing never resurrect
+    it — the ``simulate_update`` bugfix), and with ``mode="recompile"``
+    equals a fresh ``Engine.compile`` on the surviving cluster;
+  * the ``Server`` walks retry -> stale -> failover per injected fault,
+    answers every admitted request (zero drops, in-flight work replayed
+    on the degraded plan), tags responses
+    (``retries``/``recovered``/``capacity``), and costs nothing when no
+    fault fires;
+  * seeded chaos across executors: every response is bit-identical to
+    the fault-free run or carries an explicit staleness/degradation tag.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisContext, run_checks
+from repro.api import Engine
+from repro.api.faults import (FailoverAudit, Fault, FaultInjector,
+                              FaultSchedule)
+from repro.api.registry import EXCHANGES
+from repro.api.server import Request, Server
+from repro.api.slo import default_ladder
+from repro.api.updates import GraphDelta
+from repro.core import simulation
+from repro.gnn import datasets, models
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = datasets.load("siot", scale=0.06, seed=0)
+    params = models.gnn_init(jax.random.PRNGKey(0), "gcn",
+                             [g.feature_dim, 16, 8])
+    eng = Engine((params, "gcn"), "1A+3B", executor="sim",
+                 exchange="halo_async", staleness_bound=2)
+    return g, params, eng, eng.compile(g)
+
+
+# ----------------------------------------------------------------------------
+# Fault / FaultSchedule / FaultInjector
+# ----------------------------------------------------------------------------
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(0.0, "meteor", node="fog0(A)")
+    with pytest.raises(ValueError, match=">= 0"):
+        Fault(-1.0, "halo_loss")
+    with pytest.raises(ValueError, match="needs a node"):
+        Fault(0.0, "crash")
+    with pytest.raises(ValueError, match="slowdown"):
+        Fault(0.0, "straggler", node="x", slowdown=0.5, duration=1.0)
+    with pytest.raises(ValueError, match="duration"):
+        Fault(0.0, "straggler", node="x", slowdown=2.0)
+    with pytest.raises(ValueError, match="losses"):
+        Fault(0.0, "halo_loss", losses=0)
+
+
+def test_schedule_sorts_and_injector_fires_once():
+    sched = FaultSchedule([Fault(0.5, "halo_loss"), Fault(0.1, "halo_loss"),
+                           Fault(0.3, "crash", node="a")])
+    assert [f.time for f in sched] == [0.1, 0.3, 0.5]
+    inj = FaultInjector(sched)
+    assert [f.time for f in inj.due(0.3)] == [0.1, 0.3]
+    assert inj.due(0.3) == []           # consumed exactly once
+    assert inj.remaining == 1
+    assert [f.time for f in inj.flush()] == [0.5]
+    assert inj.remaining == 0
+
+
+def test_random_schedule_deterministic_and_safe():
+    nodes = ["n0", "n1"]
+    kw = dict(horizon=20.0, crash_rate=0.5, loss_rate=0.5,
+              straggler_rate=0.3, seed=7)
+    a, b = FaultSchedule.random(nodes, **kw), FaultSchedule.random(nodes,
+                                                                   **kw)
+    assert list(a) == list(b)           # seeded: bit-identical
+    assert len(a) > 0
+    c = FaultSchedule.random(nodes, **dict(kw, seed=8))
+    assert list(a) != list(c)
+    # never all nodes down at once: replay the crash/recover intervals
+    down = set()
+    for f in a:
+        if f.kind == "crash":
+            down.add(f.node)
+            assert len(down) < len(nodes)
+        elif f.kind == "recover":
+            down.discard(f.node)
+    # every crash pairs with a recover
+    counts = a.counts()
+    assert counts["crash"] == counts["recover"]
+
+
+# ----------------------------------------------------------------------------
+# Retry / failover pricing + exchange knobs
+# ----------------------------------------------------------------------------
+
+def test_simulate_retry_pricing():
+    t1, n1, ok1 = simulation.simulate_retry(1, sync_cost=5e-3)
+    assert ok1 and n1 == 1
+    assert t1 == pytest.approx(5e-3 + simulation.RETRY_BACKOFF_BASE_S)
+    t2, n2, ok2 = simulation.simulate_retry(2, sync_cost=5e-3)
+    assert ok2 and n2 == 2 and t2 > t1      # backoff grows per attempt
+    # more losses than the attempt budget: fails, partial cost reported
+    t6, n6, ok6 = simulation.simulate_retry(6, sync_cost=5e-3)
+    assert not ok6 and n6 <= simulation.RETRY_MAX_ATTEMPTS and t6 > 0
+    # a tiny timeout binds before the attempt budget does
+    tt, nt, okt = simulation.simulate_retry(2, sync_cost=5e-3,
+                                            timeout=0.01)
+    assert not okt and nt < 2 and tt <= 0.01 + 1e-12
+
+
+def test_exchange_recovery_cost():
+    halo = EXCHANGES.resolve("halo")
+    asy = EXCHANGES.resolve("halo_async")
+    assert halo.retryable and asy.retryable and asy.stale_tolerant
+    s, n, ok = asy.recovery_cost(1, 5e-3)
+    assert ok and n == 1 and s > 0
+    s6, n6, ok6 = asy.recovery_cost(6, 5e-3)
+    assert not ok6                          # budget exhausted -> tier 2/3
+    # a non-retryable spec reports zero recoverable budget
+    from repro.runtime.bsp import ExchangeSpec
+    none = ExchangeSpec(name="custom")
+    assert none.recovery_cost(1, 5e-3) == (0.0, 0, False)
+
+
+def test_simulate_failover_pricing(setup):
+    g, params, eng, plan = setup
+    t0 = simulation.simulate_failover(plan.cluster, 0)
+    assert t0 >= simulation.FAILOVER_BASE_S
+    t1 = simulation.simulate_failover(plan.cluster, 100, g.feature_dim)
+    t2 = simulation.simulate_failover(plan.cluster, 200, g.feature_dim)
+    assert t2 > t1 > t0                     # moved rows cost wire + flops
+
+
+# ----------------------------------------------------------------------------
+# Engine.fail_nodes
+# ----------------------------------------------------------------------------
+
+def test_fail_nodes_repair_coverage(setup):
+    g, params, eng, plan = setup
+    crashed = plan.cluster.nodes[-1].name
+    plan2 = eng.fail_nodes(plan, [crashed])
+    assert plan2.provenance == "failover"
+    assert plan2.config.cluster_spec is None     # the pricing bugfix
+    names = [n.name for n in plan2.cluster.nodes]
+    assert crashed not in names and len(names) == len(
+        plan.cluster.nodes) - 1
+    assert crashed not in [f.name for f in plan2.fogs]
+    a = np.asarray(plan2.placement.assignment)
+    assert a.shape[0] == g.num_vertices
+    assert a.min() >= 0 and a.max() < len(plan2.fogs)
+    assert (np.bincount(a, minlength=len(plan2.fogs)) > 0).all()
+    # partition-independent numerics: degraded plan answers identically
+    assert np.array_equal(plan2.session().query().embeddings,
+                          plan.session().query().embeddings)
+    # the fault analysis family signs off and stays silent when healthy
+    audit = FailoverAudit(plan=plan2, base_plan=plan, crashed=(crashed,))
+    report = run_checks(AnalysisContext(plan=plan2, failover=audit),
+                        families=("fault",))
+    assert set(report.ran) == {"fault.failover.coverage",
+                               "fault.halo.consistency",
+                               "fault.retry.budget"}
+    assert not report.errors and not report.warnings
+
+
+def test_fail_nodes_rejects_bad_input(setup):
+    g, params, eng, plan = setup
+    with pytest.raises(KeyError, match="unknown node"):
+        eng.fail_nodes(plan, ["not-a-node"])
+    with pytest.raises(ValueError):
+        eng.fail_nodes(plan, [])
+    with pytest.raises(ValueError):
+        eng.fail_nodes(plan, [n.name for n in plan.cluster.nodes])
+    with pytest.raises(ValueError):
+        eng.fail_nodes(plan, [99])
+
+
+def test_fail_nodes_recompile_equals_fresh_compile(setup):
+    g, params, eng, plan = setup
+    crashed = plan.cluster.nodes[-1].name
+    plan2 = eng.fail_nodes(plan, [crashed], mode="recompile")
+    survivors = dataclasses.replace(
+        plan.cluster,
+        nodes=[n for n in plan.cluster.nodes if n.name != crashed])
+    fresh = Engine((params, "gcn"), survivors, executor="sim",
+                   exchange="halo_async", staleness_bound=2).compile(g)
+    assert plan2.provenance == "failover"
+    assert np.array_equal(plan2.placement.assignment,
+                          fresh.placement.assignment)
+    assert [n.name for n in plan2.cluster.nodes] == [
+        n.name for n in fresh.cluster.nodes]
+    assert plan2.config == dataclasses.replace(fresh.config,
+                                               cluster_spec=None)
+    assert np.array_equal(plan2.session().query().embeddings,
+                          fresh.session().query().embeddings)
+
+
+def test_failover_plan_never_resurrects_node(setup):
+    """The simulate_update bugfix: after a failover, recompiles and update
+    pricing must see the SURVIVING cluster, not the named spec."""
+    g, params, eng, plan = setup
+    crashed = plan.cluster.nodes[-1].name
+    plan2 = eng.fail_nodes(plan, [crashed])
+    eng2 = Engine.from_plan(plan2)
+    survivors = [n.name for n in plan2.cluster.nodes]
+    assert [n.name for n in eng2.cluster.nodes] == survivors
+    # a delta-driven recompile stays on the survivors
+    delta = GraphDelta(add_features=np.ones((1, g.feature_dim), np.float32),
+                       add_edges=[(g.num_vertices, 0)])
+    plan3 = eng2.apply_delta(plan2, delta, force="recompile")
+    assert [n.name for n in plan3.cluster.nodes] == survivors
+    # and update pricing reads the surviving (degraded) capability pool
+    assert simulation.simulate_update(plan2.cluster, delta) > 0
+
+
+# ----------------------------------------------------------------------------
+# Server recovery tiers
+# ----------------------------------------------------------------------------
+
+def _trace(n, dt=0.03):
+    return [Request(arrival_time=i * dt) for i in range(n)]
+
+
+def test_server_rejects_unknown_fault_node(setup):
+    g, params, eng, plan = setup
+    with pytest.raises(ValueError, match="unknown nodes"):
+        plan.server(faults=FaultSchedule(
+            [Fault(0.1, "crash", node="ghost")]))
+
+
+def test_fault_free_schedule_costs_nothing(setup):
+    g, params, eng, plan = setup
+    srv0 = plan.server(max_batch=4)
+    base = srv0.serve(_trace(16))
+    srv1 = plan.server(max_batch=4, faults=FaultSchedule([]))
+    out = srv1.serve(_trace(16))
+    assert len(out) == len(base) == 16
+    for a, b in zip(out, base):
+        assert a.latency == b.latency       # exact, not approx
+        assert np.array_equal(a.embeddings, b.embeddings)
+        assert a.retries == 0 and a.recovered is None
+        assert a.capacity == "full"
+        assert a.breakdown["recovery"] == 0.0
+    assert "recovery" not in base[0].breakdown   # injector-only key
+
+
+def test_tier1_retry(setup):
+    g, params, eng, plan = setup
+    sched = FaultSchedule([Fault(0.10, "halo_loss", losses=2)])
+    srv = plan.server(max_batch=4, faults=sched)
+    out = srv.serve(_trace(16))
+    base = plan.server(max_batch=4).serve(_trace(16))
+    retried = [r for r in out if r.recovered == "retry"]
+    assert retried and all(r.retries == 2 for r in retried)
+    assert all(r.breakdown["recovery"] > 0 for r in retried)
+    # numerics untouched: the loss costs time, never accuracy
+    for a, b in zip(out, base):
+        assert np.array_equal(a.embeddings, b.embeddings)
+    assert srv.summarize(out)["retried"] == len(retried)
+    # deterministic replay: same schedule + trace -> identical timings
+    out2 = plan.server(max_batch=4, faults=sched).serve(_trace(16))
+    assert [r.latency for r in out] == [r.latency for r in out2]
+
+
+def test_tier2_stale_ride_through(setup):
+    g, params, eng, plan = setup
+    # losses=6 exhausts the 4-attempt retry budget; no node is named, so
+    # tier 3 is unreachable -> the warm halo store must carry the serve.
+    # (Fire early, while the store's age is still within the bound — at
+    # the bound the session forces a fresh sync and tier 2 is unusable.)
+    sched = FaultSchedule([Fault(0.08, "halo_loss", losses=6)])
+    srv = plan.server(max_batch=4, faults=sched)
+    out = srv.serve(_trace(16))
+    assert len(out) == 16
+    stale = [r for r in out if r.recovered == "stale"]
+    assert stale, "warm halo store should have absorbed the loss"
+    assert all(r.capacity == "full" for r in out)   # no failover happened
+
+
+def test_tier3_crash_failover_and_restore(setup):
+    g, params, eng, plan = setup
+    victim = plan.cluster.nodes[-1].name
+    sched = FaultSchedule([Fault(0.10, "crash", node=victim),
+                           Fault(0.60, "recover", node=victim)])
+    srv = plan.server(max_batch=4, faults=sched)
+    n = 40
+    out = srv.serve(_trace(n))
+    assert len(out) == n                    # zero drops
+    assert srv.replayed > 0                 # in-flight work was replayed
+    tags = [r.recovered for r in out]
+    assert "failover" in tags and "restored" in tags
+    i_f, i_r = tags.index("failover"), tags.index("restored")
+    # between failover and restore the survivors serve, tagged degraded
+    assert all(r.capacity == "degraded" for r in out[i_f:i_r])
+    assert all(r.capacity == "full" for r in out[i_r:])
+    assert not srv._crashed
+    # restored back onto the original full-cluster plan object
+    assert srv.session.plan is plan
+    # numerics: identical to fault-free wherever not explicitly tagged
+    base = plan.server(max_batch=4).serve(_trace(n))
+    for a, b in zip(out, base):
+        assert (np.array_equal(a.embeddings, b.embeddings)
+                or a.capacity == "degraded" or a.staleness > 0)
+    s = srv.summarize(out)
+    assert s["availability"] == 1.0 and s["recovered"] >= 2
+
+
+def test_straggler_slows_then_recovers(setup):
+    g, params, eng, plan = setup
+    victim = plan.cluster.nodes[1]
+    load0 = victim.background_load
+    sched = FaultSchedule([Fault(0.05, "straggler", node=victim.name,
+                                 slowdown=4.0, duration=0.30)])
+    srv = plan.server(max_batch=4, faults=sched)
+    out = srv.serve(_trace(24))
+    base = plan.server(max_batch=4).serve(_trace(24))
+    assert len(out) == 24
+    # pricing only: slower somewhere, never different answers
+    assert max(r.latency for r in out) > max(r.latency for r in base)
+    for a, b in zip(out, base):
+        assert np.array_equal(a.embeddings, b.embeddings)
+    # the extra load was lifted at expiry
+    assert not srv._slow
+    assert victim.background_load == pytest.approx(load0)
+
+
+def test_survivor_degraded_ladder(setup):
+    g, params, eng, plan = setup
+    crashed = plan.cluster.nodes[-1].name
+    ladder = default_ladder(eng.fail_nodes(plan, [crashed]).session())
+    assert ladder[0].name == "survivor-degraded"
+    # the full ladder's knob rungs are replaced, layer rungs remain
+    assert all("survivor" not in r.name for r in default_ladder(
+        plan.session()))
+
+
+def test_crash_under_slo_rebuilds_ladder(setup):
+    g, params, eng, plan = setup
+    victim = plan.cluster.nodes[-1].name
+    sched = FaultSchedule([Fault(0.10, "crash", node=victim)])
+    srv = plan.server(max_batch=4, slo=True, faults=sched)
+    out = srv.serve(_trace(24))
+    answered = [r for r in out if hasattr(r, "embeddings")]
+    assert answered and srv.ladder[0].name == "survivor-degraded"
+
+
+# ----------------------------------------------------------------------------
+# Seeded chaos property: zero drops, bit-identical or tagged
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor,aggregation", [
+    ("sim", "segment_sum"), ("sim", "pallas"), ("single", "segment_sum")])
+def test_chaos_property(setup, executor, aggregation):
+    g, params, _eng, _plan = setup
+    eng = Engine((params, "gcn"), "1A+3B", executor=executor,
+                 aggregation=aggregation, exchange="halo_async",
+                 staleness_bound=2)
+    plan = eng.compile(g)
+    n = 32
+    base = plan.server(max_batch=4).serve(_trace(n))
+    by_id = {r.request_id: r for r in base}
+    sched = FaultSchedule.random(
+        [nd.name for nd in plan.cluster.nodes],
+        horizon=n * 0.03, crash_rate=1.5, loss_rate=2.0,
+        straggler_rate=1.0, mean_outage=0.3, seed=11)
+    assert len(sched) > 0
+    srv = plan.server(max_batch=4, faults=sched)
+    out = srv.serve(_trace(n))
+    assert len(out) == n                    # every admitted request answered
+    for r in out:
+        ref = by_id[r.request_id]
+        assert (np.array_equal(r.embeddings, ref.embeddings)
+                or r.staleness > 0 or r.capacity == "degraded"), (
+            f"untagged divergence on request {r.request_id}")
+    assert srv.summarize(out)["availability"] == 1.0
+
+
+def test_chaos_property_mesh_bsp_subprocess():
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.api import Engine
+        from repro.api.faults import FaultSchedule
+        from repro.api.server import Request
+        from repro.gnn import datasets, models
+        g = datasets.load('siot', scale=0.05, seed=0)
+        params = models.gnn_init(jax.random.PRNGKey(0), 'gcn',
+                                 [g.feature_dim, 16, 8])
+        for aggregation in ('segment_sum', 'pallas'):
+            eng = Engine((params, 'gcn'), '1A+3B', executor='mesh-bsp',
+                         aggregation=aggregation, exchange='halo_async',
+                         staleness_bound=2)
+            plan = eng.compile(g)
+            trace = lambda: [Request(arrival_time=i * 0.03)
+                             for i in range(24)]
+            base = plan.server(max_batch=4).serve(trace())
+            by_id = {r.request_id: r for r in base}
+            sched = FaultSchedule.random(
+                [nd.name for nd in plan.cluster.nodes], horizon=0.8,
+                crash_rate=1.5, loss_rate=2.0, straggler_rate=1.0,
+                mean_outage=0.3, seed=5)
+            assert len(sched) > 0
+            srv = plan.server(max_batch=4, faults=sched)
+            out = srv.serve(trace())
+            assert len(out) == 24, (aggregation, len(out))
+            for r in out:
+                ref = by_id[r.request_id]
+                ok = (np.array_equal(r.embeddings, ref.embeddings)
+                      or r.staleness > 0 or r.capacity == 'degraded')
+                assert ok, (aggregation, r.request_id)
+        print('OK')
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+def test_fleet_composes_node_faults(setup):
+    """Per-site chaos schedules ride the fleet facade: a node crash
+    inside one site fails over within that site, zero drops fleet-wide,
+    and other sites never notice."""
+    g, params, _eng, _plan = setup
+    sites = {"north": (59.33, 18.07), "south": (48.21, 16.37)}
+    eng = Engine((params, "gcn"), "1A+2B", exchange="halo_async",
+                 staleness_bound=2)
+    fleet = eng.compile_fleet(g, sites)
+    with pytest.raises(ValueError, match="unknown sites"):
+        fleet.server(faults={"atlantis": FaultSchedule([])})
+    node = fleet.site("north").plan.cluster.nodes[-1].name
+    sched = FaultSchedule([Fault(0.05, "crash", node=node),
+                           Fault(0.50, "recover", node=node)])
+    fs = fleet.server(capacity=100, max_batch=4,
+                      faults={"north": sched})
+    n = 24
+    for i in range(n):
+        fs.submit(arrival_time=i * 0.03,
+                  origin=sites["north" if i % 2 == 0 else "south"])
+    out = fs.drain()
+    from repro.api.server import Response
+    resp = [r for r in out if isinstance(r, Response)]
+    assert len(resp) == n                       # zero drops
+    north = [r for r in resp if r.site == "north"]
+    south = [r for r in resp if r.site == "south"]
+    assert any(r.recovered == "failover" for r in north)
+    assert all(r.recovered is None and r.capacity == "full"
+               for r in south)                  # blast radius: one site
+    s = fs.summarize(out)
+    assert s["dropped"] == 0 and s["availability"] == 1.0
+    assert s["recovered"] >= 1
+
+
+# ----------------------------------------------------------------------------
+# Fault checks fire on mutation
+# ----------------------------------------------------------------------------
+
+def test_fault_checks_fire_on_mutation(setup):
+    g, params, eng, plan = setup
+    crashed = plan.cluster.nodes[-1].name
+    plan2 = eng.fail_nodes(plan, [crashed])
+    # resurrect the spec: the coverage check must flag it
+    bad = dataclasses.replace(
+        plan2, config=plan2.config.with_overrides(cluster_spec="1A+3B"))
+    report = run_checks(
+        AnalysisContext(plan=bad, failover=FailoverAudit(
+            plan=bad, base_plan=plan, crashed=(crashed,))),
+        families=("fault",))
+    assert any(d.check_id == "fault.failover.coverage"
+               for d in report.errors)
+    # malformed schedule: double crash without recover
+    sched = FaultSchedule([Fault(0.1, "crash", node="a"),
+                           Fault(0.2, "crash", node="a")])
+    report = run_checks(
+        AnalysisContext(plan=plan2, failover=FailoverAudit(
+            plan=plan2, schedule=sched)),
+        families=("fault",))
+    assert any(d.check_id == "fault.retry.budget" for d in report.errors)

@@ -162,6 +162,58 @@ def test_site_down_midtrace_zero_drops(setup):
     assert (r2.site, r2.route) == ("north", "local")
 
 
+def test_site_down_up_down_round_trip(setup):
+    """Revival pulls still-pending failed-over work back to its home site
+    (route "recovered"); a second outage re-forwards it — pending work at
+    every transition, zero drops throughout."""
+    _, _, fleet = setup
+    fs = fleet.server(capacity=100)
+    north_only = traces.geo_origins([SITES["north"]], spread=0.1, seed=5)
+    trace = traces.poisson(18, rate=50.0, seed=2, origin_fn=north_only)
+    for r in trace[:6]:
+        fs.submit(r)
+    assert fs.set_down("north") == 6            # down: forwarded off-site
+    for r in trace[6:12]:                       # land elsewhere directly
+        fs.submit(r)
+    moved = fs.set_down("north", False)         # up: refugees pulled home
+    assert moved == 12
+    assert fs.queue_depth("north") == 12
+    for r in trace[12:]:
+        fs.submit(r)
+    assert fs.set_down("north") == 18           # down again: all forwarded
+    assert fs.set_down("north", False) == 18    # ... and all pulled home
+    out = fs.drain()
+    resp = [r for r in out if isinstance(r, Response)]
+    assert len(resp) == 18                      # zero drops end to end
+    assert fs.summarize(out)["dropped"] == 0
+    # the final revival pulled every refugee back to its home site
+    assert all((r.site, r.route) == ("north", "recovered") for r in resp)
+    # revival on a live fleet: a fresh submit routes local again, and the
+    # recovered/"failed_over" split is visible in the summary
+    fs2 = fleet.server(capacity=100)
+    for r in trace[:6]:
+        fs2.submit(r)
+    fs2.set_down("north")
+    assert fs2.set_down("north", False) == 6
+    req = fs2.submit(origin=SITES["north"])
+    out2 = fs2.drain()
+    resp2 = [r for r in out2 if isinstance(r, Response)]
+    assert len(resp2) == 7
+    by_id = {r.request_id: r for r in resp2}
+    assert (by_id[req.request_id].site,
+            by_id[req.request_id].route) == ("north", "local")
+    recovered = [r for r in resp2 if r.route == "recovered"]
+    assert len(recovered) == 6
+    assert all(r.site == "north" for r in recovered)
+    # pulled-back requests keep their true arrivals and pay the extra hop
+    for r in recovered:
+        assert r.routing_delay > 0
+    s = fs2.summarize(out2)
+    assert s["routes"]["recovered"] == 6
+    assert s["sites"]["north"]["recovered"] == 6
+    assert s["dropped"] == 0
+
+
 def test_cross_site_clocks_and_latency(setup):
     """Per-site clocks: two sites serve concurrently (neither queues
     behind the other); one site serving both requests serializes them.
